@@ -1,0 +1,18 @@
+"""Shared benchmark plumbing: timing + CSV rows + fast-mode switch."""
+from __future__ import annotations
+
+import os
+import time
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+RESULTS: list[tuple[str, float, str]] = []
+
+
+def record(name: str, t0: float, derived: str):
+    us = (time.time() - t0) * 1e6
+    RESULTS.append((name, us, derived))
+    print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+def emit_header():
+    print("name,us_per_call,derived", flush=True)

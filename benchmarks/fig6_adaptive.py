@@ -1,0 +1,102 @@
+"""Fig. 6: Fixed vs Adaptive splitting under S0-S3, three metrics.
+
+Paper headline: under jamming, E2E delay 1657 ms -> 589 ms (64.45% better);
+UE-to-BS 37.39%, BS-to-BS 56.67%; no-interference identical; adaptive costs
+some extra UE energy. The fixed policy is the no-interference optimum; the
+adaptive policy queries the PSO table with the (trained) estimator's
+throughput prediction each 0.1s report.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import FAST, record
+from repro.channel import scenarios as sc
+from repro.channel import throughput as tpm
+from repro.core.controller import AdaptiveSplitController, ControllerConfig
+from repro.core.energy import EDGE_A40X2, UE_VM_2CORE
+from repro.core.objective import Constraints, Weights, evaluate
+from repro.core.pso import pso_vectorized
+from repro.estimator.train import predict
+
+SCEN_LABEL = {"none": "No Interference", "jamming": "Jamming (S1)",
+              "cci": "UE-to-BS Int. (S2)", "tdd": "BS-to-BS Int. (S3)"}
+PAPER_DELAY_GAIN = {"jamming": 64.45, "cci": 37.39, "tdd": 56.67}
+
+# interference operating points per scenario (dBm at gNB), calibrated to the
+# paper's throughput regime: jamming ~8-9 Mbps, CCI ~16 Mbps, TDD ~10 Mbps
+SCEN_INT = {"none": -60.0, "jamming": 8.2, "cci": 5.0, "tdd": 7.5}
+
+
+def _metrics_at(prof, l0, tp_mbps):
+    terms = evaluate(prof, UE_VM_2CORE, EDGE_A40X2,
+                     np.array([tp_mbps * 1e6]), Weights(1, 0, 0),
+                     Constraints())
+    return (float(terms.d_e2e[l0, 0]), float(prof.privacy[l0]),
+            float(terms.e_ue[l0]))
+
+
+def run(state: dict) -> None:
+    t0 = time.time()
+    prof = state["vgg_profile"]
+    w = Weights(1.0, 0.15, 0.1)
+    cons = Constraints(rho_max=0.92, tau_max_s=6.0, e_max_j=40.0)
+    table = pso_vectorized(prof, UE_VM_2CORE, EDGE_A40X2, w, cons, 130)
+    fixed_split = table.query(float(tpm.max_throughput_mbps(
+        np.array(SCEN_INT["none"]))))
+    est = state.get("estimator")  # (cfg, params) from table2, or None
+    rng = np.random.default_rng(123)
+    T = 30 if FAST else 80
+    load = 0.12  # low UL load: the regime where KPMs alone fail
+    summary = {}
+    for scen, int_dbm in SCEN_INT.items():
+        trace = np.clip(int_dbm + rng.normal(0, 1.0, T + sc.WINDOW), -60, 14)
+        if scen == "none":
+            trace[:] = -60.0
+        # KPM reports along the ACTUAL trace (rolling estimator windows)
+        from repro.channel import iq as iqmod
+        from repro.channel.kpm import kpm_window, normalize_kpms
+        kpms_all = normalize_kpms(kpm_window(trace, load, rng, scen))
+        ctl = AdaptiveSplitController(table, ControllerConfig(
+            ewma_alpha=0.6, hysteresis_steps=2, fallback_split=fixed_split))
+        # warm start: the AF streams reports continuously before this window
+        ctl.current_split = fixed_split
+        fixed_acc, adap_acc = [], []
+        for t in range(sc.WINDOW, sc.WINDOW + T):
+            true_tp = float(tpm.max_throughput_mbps(np.array(trace[t])))
+            if est is not None:
+                ecfg, eparams = est
+                iq = iqmod.spectrogram(float(trace[t]), scen, load, rng,
+                                       n_sc=ecfg.n_sc)
+                data = {"kpms": kpms_all[None, t - sc.WINDOW:t],
+                        "iq": iq[None].astype(np.float32),
+                        "alloc": np.array([load], np.float32),
+                        "tp": np.array([0.0], np.float32)}
+                est_tp = float(np.clip(predict(ecfg, eparams, data)[0],
+                                       1.0, 130.0))
+            else:
+                est_tp = true_tp
+            l_adap = ctl.update(est_tp)
+            fixed_acc.append(_metrics_at(prof, fixed_split, true_tp))
+            adap_acc.append(_metrics_at(prof, l_adap, true_tp))
+        fx = np.mean(fixed_acc, axis=0)
+        ad = np.mean(adap_acc, axis=0)
+        gain = 100.0 * (fx[0] - ad[0]) / max(fx[0], 1e-9)
+        summary[scen] = (fx, ad, gain)
+        record(f"fig6/{scen}", t0,
+               f"fixed_ms={fx[0]*1e3:.0f};adaptive_ms={ad[0]*1e3:.0f};"
+               f"delay_gain_pct={gain:.1f};paper_gain_pct="
+               f"{PAPER_DELAY_GAIN.get(scen, 0.0)};"
+               f"privacy_fixed={fx[1]:.3f};privacy_adapt={ad[1]:.3f};"
+               f"energy_fixed_J={fx[2]:.2f};energy_adapt_J={ad[2]:.2f}")
+    ok_none = abs(summary["none"][2]) < 1.0
+    ok_jam = summary["jamming"][2] > 40.0
+    ok_energy = all(summary[s][1][2] >= summary[s][0][2] - 1e-9
+                    for s in ("jamming", "cci", "tdd"))
+    record("fig6/claims", t0,
+           f"no_interference_identical={ok_none};"
+           f"jamming_gain>40pct={ok_jam};"
+           f"adaptive_trades_energy={ok_energy}")
+    state["fig6"] = summary

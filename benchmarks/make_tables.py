@@ -1,0 +1,73 @@
+"""Render EXPERIMENTS.md tables from dry-run JSONs.
+
+Usage: PYTHONPATH=src python -m benchmarks.make_tables [--perf]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+DIR = pathlib.Path(__file__).parent / "results" / "dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt(x, nd=3):
+    return f"{x:.{nd}f}" if isinstance(x, (int, float)) else str(x)
+
+
+def baseline_table() -> str:
+    rows = ["| arch | shape | ga | t_compute s | t_memory s | t_collective s"
+            " | bottleneck | useful | MFU-bound | fits 16GB | pod2 |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    pod2 = {}
+    for f in (DIR / "pod2").glob("*.json"):
+        d = json.loads(f.read_text())
+        pod2[(d["arch"], d["shape"])] = d["status"]
+    for f in sorted((DIR / "pod1").glob("*.json")):
+        if f.stem.count("__") != 1:
+            continue
+        d = json.loads(f.read_text())
+        arch, shape = d["arch"], d["shape"]
+        p2 = pod2.get((arch, shape), "?")
+        if d["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | — | — | — | — | "
+                        f"{d['status']} | — | — | — | {p2} |")
+            continue
+        r = d["roofline"]
+        rows.append(
+            f"| {arch} | {shape} | {d.get('grad_accum')} "
+            f"| {fmt(r['t_compute_s'], 4)} | {fmt(r['t_memory_s'], 4)} "
+            f"| {fmt(r['t_collective_s'], 4)} | {r['bottleneck']} "
+            f"| {fmt(r['useful_flops_ratio'])} | {fmt(r['mfu_bound'])} "
+            f"| {r.get('fits_16gb_hbm')} | {p2} |")
+    return "\n".join(rows)
+
+
+def perf_table(stems: list[str]) -> str:
+    rows = ["| experiment | t_compute | t_memory | t_collective | bottleneck"
+            " | useful | fits |", "|---|---|---|---|---|---|---|"]
+    for stem in stems:
+        f = DIR / "pod1" / f"{stem}.json"
+        if not f.exists():
+            rows.append(f"| {stem} | missing | | | | | |")
+            continue
+        d = json.loads(f.read_text())
+        r = d.get("roofline", {})
+        if not r:
+            rows.append(f"| {stem} | {d['status']} | | | | | |")
+            continue
+        rows.append(f"| {stem} | {fmt(r['t_compute_s'], 4)} "
+                    f"| {fmt(r['t_memory_s'], 4)} "
+                    f"| {fmt(r['t_collective_s'], 4)} | {r['bottleneck']} "
+                    f"| {fmt(r['useful_flops_ratio'])} "
+                    f"| {r.get('fits_16gb_hbm')} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    if "--perf" in sys.argv:
+        stems = [a for a in sys.argv[1:] if a != "--perf"]
+        print(perf_table(stems))
+    else:
+        print(baseline_table())

@@ -1,0 +1,49 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md source).
+
+Reads benchmarks/results/dryrun/pod1/*.json (+ pod2 compile proof) and
+emits one CSV row per (arch x shape) with the three terms, bottleneck,
+usefulness ratio and HBM fit.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from benchmarks.common import record
+
+DIR = pathlib.Path(__file__).parent / "results" / "dryrun"
+
+
+def load_cells(pod: str = "pod1") -> list[dict]:
+    out = []
+    for f in sorted((DIR / pod).glob("*.json")):
+        if "__" in f.stem and f.stem.count("__") == 1:
+            out.append(json.loads(f.read_text()))
+    return out
+
+
+def run(state: dict) -> None:
+    t0 = time.time()
+    pod2 = {(d["arch"], d["shape"]): d for d in load_cells("pod2")}
+    n_ok2 = sum(1 for d in pod2.values() if d["status"] == "ok")
+    cells = load_cells("pod1")
+    state["roofline_cells"] = cells
+    for d in cells:
+        name = f"roofline/{d['arch']}/{d['shape']}"
+        if d["status"] != "ok":
+            record(name, t0, f"status={d['status']}")
+            continue
+        r = d["roofline"]
+        p2 = pod2.get((d["arch"], d["shape"]), {}).get("status", "missing")
+        record(name, t0,
+               f"t_compute={r['t_compute_s']:.4f};t_memory="
+               f"{r['t_memory_s']:.4f};t_collective={r['t_collective_s']:.4f};"
+               f"bottleneck={r['bottleneck']};useful="
+               f"{r['useful_flops_ratio']:.3f};mfu_bound={r['mfu_bound']:.3f};"
+               f"fits16GB={r.get('fits_16gb_hbm')};ga={d.get('grad_accum')};"
+               f"pod2={p2}")
+    ok1 = sum(1 for d in cells if d["status"] == "ok")
+    record("roofline/summary", t0,
+           f"pod1_ok={ok1};pod2_ok={n_ok2};"
+           f"skips={sum(1 for d in cells if d['status'].startswith('skip'))}")

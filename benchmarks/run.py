@@ -1,0 +1,33 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (benchmarks.common.record).
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (fig2_zones, fig5_objective, fig6_adaptive, roofline,
+                        table2_estimator)
+from benchmarks.common import emit_header, record
+
+
+def main() -> None:
+    emit_header()
+    state: dict = {}
+    failures = []
+    for mod in (fig2_zones, fig5_objective, table2_estimator, fig6_adaptive,
+                roofline):
+        t0 = time.time()
+        try:
+            mod.run(state)
+        except Exception:
+            failures.append(mod.__name__)
+            traceback.print_exc()
+            record(f"{mod.__name__}/ERROR", t0, "see stderr")
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Table II: throughput-estimator comparison.
+
+Paper:  A XGBoost, 7 KPMs          R2 0.3160  RMSE 10.77
+        B XGBoost, 15 KPMs         R2 0.7845  RMSE  6.05
+        C proposed (KPM ts + IQ)   R2 0.9636  RMSE  2.48
+Here (no xgboost offline): A/B become ridge + MLP on the same feature sets;
+low-load interference regime, where the paper's gap comes from. The
+reproduction target is the ordering and the IQ-fusion gap.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import FAST, record
+from repro.channel import scenarios as sc
+from repro.estimator.baselines import (mlp_fit_predict, ridge_fit,
+                                       ridge_predict, summary_features)
+from repro.estimator.model import EstimatorConfig
+from repro.estimator.train import r2_rmse, train_estimator
+
+N_SC = 364 if FAST else 1092  # spectrogram rows (full 3276 in unit tests)
+
+
+def run(state: dict) -> None:
+    t0 = time.time()
+    rng = np.random.default_rng(42)
+    n_tr, n_te, steps = (40, 15, 120) if FAST else (150, 60, 400)
+    tr = sc.gen_dataset(n_tr, rng, episode_len=12, low_load_only=True,
+                        n_sc=N_SC)
+    te = sc.gen_dataset(n_te, rng, episode_len=8, low_load_only=True,
+                        n_sc=N_SC)
+    rows = {}
+    for name, fs in (("A_ridge_7kpm", "kpm7"), ("B_ridge_15kpm", "kpm15")):
+        w = ridge_fit(summary_features(tr["kpms"], fs), tr["tp"])
+        rows[name] = r2_rmse(
+            ridge_predict(w, summary_features(te["kpms"], fs)), te["tp"])
+    for name, fs in (("A_mlp_7kpm", "kpm7"), ("B_mlp_15kpm", "kpm15")):
+        pred = mlp_fit_predict(summary_features(tr["kpms"], fs), tr["tp"],
+                               summary_features(te["kpms"], fs))
+        rows[name] = r2_rmse(pred, te["tp"])
+    e = EstimatorConfig(n_sc=N_SC, lstm_hidden=64, hidden=64)
+    params, _, (r2c, rmsec) = train_estimator(
+        e, tr, steps=steps, batch=24, eval_data=te, log_every=200)
+    rows["C_proposed_kpm_ts_plus_iq"] = (r2c, rmsec)
+    state["estimator"] = (e, params)
+    state["table2"] = rows
+    paper = {"A": (0.3160, 10.7748), "B": (0.7845, 6.0478),
+             "C": (0.9636, 2.4839)}
+    for name, (r2, rmse) in rows.items():
+        ref = paper.get(name[0], ("", ""))
+        record(f"table2/{name}", t0,
+               f"r2={r2:.4f};rmse={rmse:.3f};paper_r2={ref[0]};"
+               f"paper_rmse={ref[1]}")
+    ok = (rows["C_proposed_kpm_ts_plus_iq"][0] >
+          max(rows["B_ridge_15kpm"][0], rows["B_mlp_15kpm"][0]) >=
+          min(rows["A_ridge_7kpm"][0], rows["A_mlp_7kpm"][0]))
+    record("table2/ordering_A<B<C", t0, f"reproduced={ok}")

@@ -1,0 +1,46 @@
+"""Train the AI throughput estimator (Fig. 3 / Table I) on simulated 5G
+channels and evaluate R^2 / RMSE per scenario.
+
+Run: PYTHONPATH=src python examples/train_estimator.py [--full-iq]
+(--full-iq uses the paper's full 3276-row spectrograms; default is 1/3
+height for CPU speed — the architecture is identical.)
+"""
+import argparse
+
+import numpy as np
+
+from repro.channel import scenarios as sc
+from repro.estimator.model import EstimatorConfig
+from repro.estimator.train import predict, r2_rmse, train_estimator
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full-iq", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    n_sc = 3276 if args.full_iq else 1092
+    e = EstimatorConfig(n_sc=n_sc)  # lstm_hidden=124, window=30 (paper)
+    rng = np.random.default_rng(1)
+    print("generating channel dataset...")
+    tr = sc.gen_dataset(100, rng, episode_len=12, n_sc=n_sc)
+    te = sc.gen_dataset(40, rng, episode_len=8, n_sc=n_sc)
+    print(f"train={len(tr['tp'])} test={len(te['tp'])} samples, "
+          f"iq={tr['iq'].shape[1:]}")
+    params, hist, (r2, rmse) = train_estimator(
+        e, tr, steps=args.steps, batch=24, eval_data=te, log_every=50)
+    for s, l in hist:
+        print(f"  step {s:4d} mse {l:9.1f}")
+    print(f"TEST: R2={r2:.4f} RMSE={rmse:.3f} Mbps "
+          f"(paper: R2=0.9636 RMSE=2.48)")
+    pred = predict(e, params, te)
+    for i, scen in enumerate(sc.SCENARIOS):
+        m = te["scenario"] == i
+        if m.sum() > 2:
+            r2s, rmses = r2_rmse(pred[m], te["tp"][m])
+            print(f"  {scen:8s}: R2={r2s:.3f} RMSE={rmses:.2f} "
+                  f"(n={int(m.sum())})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""End-to-end training driver: pretrain an LM with the full runtime stack
+(synthetic data pipeline, AdamW + cosine, grad accumulation, async
+checkpointing, straggler watchdog, resume).
+
+Presets:
+  smoke : ~1M params,   60 steps  (seconds — CI default)
+  10m   : ~14M params,  200 steps (minutes on CPU)
+  100m  : ~105M params, 300 steps (the deliverable config; hours on 1 CPU
+          core, minutes on real accelerators)
+
+Run: PYTHONPATH=src python examples/train_lm.py --preset smoke
+     PYTHONPATH=src python examples/train_lm.py --preset 100m --resume
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+PRESETS = {
+    "smoke": dict(d_model=128, n_layers=4, n_heads=4, kv_heads=4, head_dim=32,
+                  d_ff=512, vocab=2048, seq=64, batch=8, steps=60),
+    "10m": dict(d_model=256, n_layers=8, n_heads=8, kv_heads=4, head_dim=32,
+                d_ff=1024, vocab=8192, seq=128, batch=8, steps=200),
+    "100m": dict(d_model=640, n_layers=10, n_heads=10, kv_heads=5,
+                 head_dim=64, d_ff=2560, vocab=32768, seq=256, batch=8,
+                 steps=300),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="smoke", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+    base = get_config("granite-8b")  # llama-family block structure
+    cfg = dataclasses.replace(
+        base, name=f"lm-{args.preset}", d_model=p["d_model"],
+        n_layers=p["n_layers"], n_heads=p["n_heads"], kv_heads=p["kv_heads"],
+        head_dim=p["head_dim"], d_ff=p["d_ff"], vocab=p["vocab"])
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    tc = TrainerConfig(
+        seq=p["seq"], global_batch=p["batch"],
+        steps=args.steps or p["steps"], ckpt_every=25,
+        ckpt_dir=args.ckpt_dir or f"/tmp/repro_{args.preset}",
+        lr=1e-3, warmup=20, remat="none")
+    trainer = Trainer(cfg, tc, on_straggler=lambda s, a, dt: print(
+        f"  [watchdog] step {s}: {a.name} ({dt:.2f}s)"))
+    _, hist = trainer.run(resume=args.resume)
+    n = max(1, len(hist) // 8)
+    for s, l in hist[::n]:
+        print(f"step {int(s):4d} loss {l:.4f}")
+    drop = hist[0, 1] - hist[-1, 1]
+    print(f"final loss {hist[-1,1]:.4f} (drop {drop:.3f}) — "
+          f"checkpoints in {tc.ckpt_dir}")
+    assert drop > 0, "loss did not improve"
+
+
+if __name__ == "__main__":
+    main()

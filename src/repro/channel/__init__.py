@@ -1,0 +1,1 @@
+from repro.channel import iq, kpm, scenarios, throughput  # noqa: F401

@@ -1,0 +1,87 @@
+"""Interference scenarios (Fig. 4) + estimator dataset generation.
+
+S0 none | S1 jamming (signal generator) | S2 UE-to-BS CCI | S3 BS-to-BS TDD
+pattern mismatch. Each episode draws an interference-power trajectory,
+produces 0.1s KPM reports, per-window IQ spectrograms, and the ground-truth
+max achievable throughput label.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.channel import iq as iqmod
+from repro.channel import kpm as kpmmod
+from repro.channel import throughput as tpmod
+
+SCENARIOS = ("none", "jamming", "cci", "tdd")
+WINDOW = 30  # paper: LSTM window=30 KPM reports
+
+
+@dataclasses.dataclass
+class Sample:
+    kpms: np.ndarray  # (WINDOW, 15)
+    iq: np.ndarray  # (2, n_sc, 14)
+    alloc_ratio: float
+    tp_mbps: float
+    scenario: str
+    int_dbm: float
+
+
+def interference_trace(scenario: str, T: int,
+                       rng: np.random.Generator) -> np.ndarray:
+    """Interference power (dBm) over T reporting periods."""
+    if scenario == "none":
+        return np.full(T, -60.0)
+    base = rng.uniform(-30, 10)
+    walk = np.cumsum(rng.normal(0, 1.0, T))
+    tr = base + walk - walk.mean()
+    if scenario == "jamming":  # bursty on/off jammer
+        on = (np.sin(np.arange(T) / rng.uniform(3, 10)) > -0.3)
+        tr = np.where(on, tr, -60.0)
+    return np.clip(tr, -60, 14)
+
+
+def gen_episode(scenario: str, T: int, rng: np.random.Generator,
+                load_ratio: float | None = None, n_sc: int = iqmod.N_SC
+                ) -> list[Sample]:
+    lr = rng.uniform(0.05, 1.0) if load_ratio is None else load_ratio
+    tr = interference_trace(scenario, T + WINDOW, rng)
+    kpms = kpmmod.kpm_window(tr, lr, rng, scenario)
+    out = []
+    for t in range(WINDOW, T + WINDOW):
+        x = float(tr[t])
+        out.append(Sample(
+            kpms=kpms[t - WINDOW:t],
+            iq=iqmod.spectrogram(x, scenario, lr, rng, n_sc=n_sc),
+            alloc_ratio=lr,
+            tp_mbps=float(tpmod.max_throughput_mbps(np.array(x))),
+            scenario=scenario,
+            int_dbm=x,
+        ))
+    return out
+
+
+def gen_dataset(n_per_scenario: int, rng: np.random.Generator,
+                scenarios=SCENARIOS, episode_len: int = 20,
+                low_load_only: bool = False, n_sc: int = iqmod.N_SC):
+    """Arrays ready for the estimator: dict of stacked fields."""
+    samples: list[Sample] = []
+    while min(sum(s.scenario == sc for s in samples) for sc in scenarios
+              ) < n_per_scenario if samples else True:
+        for sc in scenarios:
+            lr = rng.uniform(0.05, 0.2) if low_load_only else None
+            samples.extend(gen_episode(sc, episode_len, rng, load_ratio=lr,
+                                       n_sc=n_sc))
+        if all(sum(s.scenario == sc for s in samples) >= n_per_scenario
+               for sc in scenarios):
+            break
+    rng.shuffle(samples)
+    kpms = np.stack([kpmmod.normalize_kpms(s.kpms) for s in samples])
+    iqs = np.stack([s.iq for s in samples])
+    alloc = np.array([s.alloc_ratio for s in samples], np.float32)
+    y = np.array([s.tp_mbps for s in samples], np.float32)
+    meta = np.array([SCENARIOS.index(s.scenario) for s in samples])
+    return {"kpms": kpms.astype(np.float32), "iq": iqs.astype(np.float32),
+            "alloc": alloc, "tp": y, "scenario": meta}

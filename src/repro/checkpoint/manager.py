@@ -1,0 +1,115 @@
+"""Mesh-agnostic checkpointing with async save and elastic restore.
+
+Arrays are written logically-unsharded (np.asarray gathers), one .npy per
+leaf plus a JSON manifest; restore device_puts against WHATEVER sharding
+tree the current mesh dictates — a checkpoint written on a 1x4 mesh
+restores on 2x2 or on 512 devices (elastic scaling). Writes go to a temp
+dir renamed atomically; a background thread makes saves non-blocking.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(p), x) for p, x in leaves], treedef
+
+
+def save(ckpt_dir, step: int, tree, *, blocking: bool = True):
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    host = jax.tree.map(lambda x: np.asarray(x), tree)  # gather to host
+
+    def _write():
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        pairs, _ = _flatten(host)
+        manifest = {"step": step, "leaves": []}
+        for i, (name, arr) in enumerate(pairs):
+            fn = f"leaf_{i:05d}.npy"
+            np.save(tmp / fn, arr)
+            manifest["leaves"].append(
+                {"key": name, "file": fn, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype)})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir) -> int | None:
+    p = pathlib.Path(ckpt_dir)
+    if not p.exists():
+        return None
+    steps = sorted(int(d.name.split("_")[1]) for d in p.iterdir()
+                   if d.name.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir, step: int, like_tree, shardings=None):
+    """Restore into the structure of like_tree; device_put per-leaf against
+    shardings (same pytree) if given — this is where elastic re-sharding
+    happens."""
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    arrays = [np.load(d / leaf["file"]) for leaf in manifest["leaves"]]
+    leaves, treedef = jax.tree_util.tree_flatten(like_tree)
+    assert len(leaves) == len(arrays), (len(leaves), len(arrays))
+    tree = jax.tree_util.tree_unflatten(treedef, arrays)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree
+
+
+class CheckpointManager:
+    """Keep-last-k manager with async saves."""
+
+    def __init__(self, ckpt_dir, keep: int = 3):
+        self.dir = pathlib.Path(ckpt_dir)
+        self.keep = keep
+        self._pending: threading.Thread | None = None
+
+    def save(self, step: int, tree, *, blocking: bool = False):
+        self.wait()
+        self._pending = save(self.dir, step, tree, blocking=blocking)
+        self._gc()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        if not self.dir.exists():
+            return
+        steps = sorted(int(d.name.split("_")[1]) for d in self.dir.iterdir()
+                       if d.name.startswith("step_"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    def latest(self):
+        return latest_step(self.dir)
+
+    def restore(self, like_tree, shardings=None, step=None):
+        step = step if step is not None else self.latest()
+        assert step is not None, "no checkpoint found"
+        return restore(self.dir, step, like_tree, shardings), step

@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    BlockSpec,
+    ModelConfig,
+    cell_status,
+    get_config,
+    list_archs,
+    register,
+)

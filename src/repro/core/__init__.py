@@ -1,0 +1,15 @@
+# The paper's primary contribution: adaptive, constraint-filtered model
+# partitioning (PSO lookup tables + dCor privacy + UE energy model), driven
+# by the AI throughput estimator (repro/estimator) over simulated 5G channels
+# (repro/channel), applied to VGG16 and every assigned LM architecture
+# (core/splitting) with a quantising boundary codec (core/boundary).
+from repro.core import (  # noqa: F401
+    boundary,
+    controller,
+    energy,
+    objective,
+    privacy,
+    profiles,
+    pso,
+    splitting,
+)

@@ -1,0 +1,62 @@
+"""Split-boundary activation codec (beyond-paper, JALAD-inspired).
+
+The head quantises the intermediate activation before transmission; the tail
+dequantises. data_size(l) scales with the codec ratio, which changes the PSO
+tables — deeper splits tolerate lower bitwidths (features are more abstract).
+Pure-jnp here; the int8 path has a Pallas kernel (repro/kernels/quant).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    name: str
+    bits: int
+
+    @property
+    def ratio(self) -> float:
+        """bytes(coded)/bytes(bf16 reference)."""
+        return self.bits / 16.0
+
+
+FP16 = Codec("fp16", 16)
+INT8 = Codec("int8", 8)
+INT4 = Codec("int4", 4)
+
+
+def quantize(x: jax.Array, bits: int):
+    """Symmetric per-channel (last dim) quantisation. Returns (q, scale)."""
+    assert bits in (4, 8)
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return q, scale.astype(F32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (q.astype(F32) * scale).astype(dtype)
+
+
+def roundtrip(x: jax.Array, codec: Codec) -> jax.Array:
+    if codec.bits >= 16:
+        return x.astype(jnp.bfloat16).astype(x.dtype)
+    q, s = quantize(x, codec.bits)
+    return dequantize(q, s, x.dtype)
+
+
+def transmit_bytes(shape, codec: Codec) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    payload = n * codec.bits // 8
+    if codec.bits < 16:  # per-channel fp32 scales
+        payload += 4 * n // int(shape[-1])
+    return payload

@@ -1,0 +1,55 @@
+"""Adaptive runtime controller (the AF in Fig. 1).
+
+Consumes throughput estimates from the RAN estimator every 0.1 s, smooths
+them (EWMA), queries the PSO lookup table, and re-splits with hysteresis so
+transient estimate noise does not thrash the deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.pso import NO_SPLIT, LookupTable
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    ewma_alpha: float = 0.5  # weight of the newest estimate
+    hysteresis_steps: int = 2  # consecutive agreeing decisions to switch
+    fallback_split: int = NO_SPLIT  # used when no feasible split exists
+
+
+class AdaptiveSplitController:
+    def __init__(self, table: LookupTable,
+                 cfg: Optional[ControllerConfig] = None):
+        self.table = table
+        self.cfg = cfg or ControllerConfig()
+        self.tp_ewma: Optional[float] = None
+        self.current_split: int = NO_SPLIT
+        self.pending_split: int = NO_SPLIT
+        self.pending_count = 0
+        self.switches: list[tuple[int, float, int]] = []  # (step, tp, l)
+        self._step = 0
+
+    def update(self, tp_estimate_mbps: float) -> int:
+        """Feed one estimator report; returns the split to use now."""
+        a = self.cfg.ewma_alpha
+        self.tp_ewma = (tp_estimate_mbps if self.tp_ewma is None
+                        else a * tp_estimate_mbps + (1 - a) * self.tp_ewma)
+        proposal = self.table.query(self.tp_ewma)
+        if proposal == NO_SPLIT:
+            proposal = self.cfg.fallback_split
+        if proposal != self.current_split:
+            if proposal == self.pending_split:
+                self.pending_count += 1
+            else:
+                self.pending_split = proposal
+                self.pending_count = 1
+            if self.pending_count >= self.cfg.hysteresis_steps:
+                self.current_split = proposal
+                self.switches.append((self._step, self.tp_ewma, proposal))
+                self.pending_count = 0
+        else:
+            self.pending_count = 0
+        self._step += 1
+        return self.current_split

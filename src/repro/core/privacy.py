@@ -1,0 +1,53 @@
+"""Privacy leakage metric: distance correlation (Székely dCor), as used by
+the paper (via NoPeek [12]) between input images and intermediate activations.
+
+dCor in [0,1]; lower = less information about the input leaks through the
+transmitted features. Pure-jnp oracle here; the O(n^2 d) pairwise-distance
+hot spot has a Pallas kernel in repro/kernels/dcor (ops.pairwise_dists).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def pairwise_dists(x: jax.Array) -> jax.Array:
+    """Euclidean distance matrix. x: (n, d) -> (n, n)."""
+    x = x.astype(F32)
+    sq = jnp.sum(x * x, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def _double_center(a: jax.Array) -> jax.Array:
+    rm = a.mean(axis=0, keepdims=True)
+    cm = a.mean(axis=1, keepdims=True)
+    return a - rm - cm + a.mean()
+
+
+def dcov2(a_centered, b_centered) -> jax.Array:
+    return jnp.mean(a_centered * b_centered)
+
+
+def dcor(x: jax.Array, y: jax.Array, *, dist_fn=pairwise_dists) -> jax.Array:
+    """Distance correlation between samples x: (n, dx) and y: (n, dy)."""
+    a = _double_center(dist_fn(x.reshape(x.shape[0], -1)))
+    b = _double_center(dist_fn(y.reshape(y.shape[0], -1)))
+    dxy = dcov2(a, b)
+    dxx = dcov2(a, a)
+    dyy = dcov2(b, b)
+    denom = jnp.sqrt(jnp.maximum(dxx * dyy, 1e-30))
+    return jnp.sqrt(jnp.maximum(dxy, 0.0) / denom)
+
+
+dcor_jit = jax.jit(dcor)
+
+
+def layer_privacy_profile(inputs, activations_by_layer) -> jnp.ndarray:
+    """P(l) for every candidate split: dCor(input, activation_l)."""
+    vals = []
+    for act in activations_by_layer:
+        vals.append(dcor_jit(inputs, act))
+    return jnp.stack(vals)

@@ -1,0 +1,109 @@
+"""Head/tail model partitioning — the mechanism the PSO tables drive.
+
+VGG16: split at any of the 43 op boundaries.
+LM architectures: split at megablock boundaries (pattern repeats); the head
+runs embed + groups[:k], the tail groups[k:] + remainder + logits. At pod
+scale the boundary crossing is the inter-pod link; the codec (core/boundary)
+shrinks the transmitted activation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import boundary
+from repro.dist.sharding import constrain
+from repro.models import blocks as B
+from repro.models import lm
+from repro.models import vgg as vggmod
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------------ VGG split
+def vgg_head(vcfg, params, images, l: int):
+    """Ops [0, l) on the UE. Returns the intermediate activation."""
+    return vggmod.forward(vcfg, params, images, start=0, stop=l)
+
+
+def vgg_tail(vcfg, params, act, l: int):
+    return vggmod.forward(vcfg, params, act, start=l, stop=43)
+
+
+def vgg_split_infer(vcfg, params, images, l: int,
+                    codec: boundary.Codec = boundary.FP16):
+    """End-to-end split inference incl. boundary codec round-trip."""
+    act = vgg_head(vcfg, params, images, l)
+    act = boundary.roundtrip(act, codec)
+    return vgg_tail(vcfg, params, act, l)
+
+
+# ------------------------------------------------------------------ LM split
+def lm_split_points(cfg) -> list[int]:
+    """Valid split indices in megablock units (1..n_full)."""
+    return list(range(1, cfg.n_full_patterns + 1))
+
+
+def _slice_groups(params, lo, hi):
+    return jax.tree.map(lambda t: t[lo:hi], params["groups"])
+
+
+def lm_head(cfg, params, batch, k: int, *, dtype=jnp.bfloat16):
+    """embed + pattern-groups [0, k) -> residual activation (B, S, D)."""
+    x = lm.embed_in(cfg, params, batch, dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+    vision = batch.get("vision")
+
+    def body(carry, gparams):
+        x = carry
+        for i, spec in enumerate(cfg.pattern):
+            x, _, _ = lm.apply_block(cfg, spec, gparams[i], x, mode="train",
+                                     positions=positions, vision=vision,
+                                     dtype=dtype)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, _slice_groups(params, 0, k))
+    return constrain(x, ("batch", "ctx", "embed"))
+
+
+def lm_tail(cfg, params, act, batch, k: int, *, dtype=jnp.bfloat16,
+            logits_mode="last"):
+    """pattern-groups [k, n_full) + remainder + logits."""
+    x = act.astype(dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+    vision = batch.get("vision")
+
+    def body(carry, gparams):
+        x = carry
+        for i, spec in enumerate(cfg.pattern):
+            x, _, _ = lm.apply_block(cfg, spec, gparams[i], x, mode="train",
+                                     positions=positions, vision=vision,
+                                     dtype=dtype)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, _slice_groups(params, k,
+                                               cfg.n_full_patterns))
+    for spec, p in zip(cfg.remainder, params["rem"]):
+        x, _, _ = lm.apply_block(cfg, spec, p, x, mode="train",
+                                 positions=positions, vision=vision,
+                                 dtype=dtype)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    return lm.logits_out(cfg, params, x, dtype)
+
+
+def lm_split_infer(cfg, params, batch, k: int,
+                   codec: boundary.Codec = boundary.FP16,
+                   *, dtype=jnp.bfloat16, logits_mode="last"):
+    """Reference split inference (single runtime). The production path runs
+    head and tail as separate jits on pod submeshes — see launch/serve.py."""
+    act = lm_head(cfg, params, batch, k, dtype=dtype)
+    act = boundary.roundtrip(act, codec)
+    return lm_tail(cfg, params, act, batch, k, dtype=dtype,
+                   logits_mode=logits_mode)
+
+
+def boundary_bytes(cfg, seq: int, batch: int, codec: boundary.Codec) -> int:
+    return boundary.transmit_bytes((batch, seq, cfg.d_model), codec)

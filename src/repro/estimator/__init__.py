@@ -1,0 +1,1 @@
+from repro.estimator import baselines, model, train  # noqa: F401

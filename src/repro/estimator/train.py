@@ -1,0 +1,79 @@
+"""Training loop + metrics for the throughput estimator."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.estimator.model import (EstimatorConfig, estimator_forward,
+                                   init_estimator)
+from repro.optim import AdamW
+
+F32 = jnp.float32
+
+
+def r2_rmse(pred: np.ndarray, y: np.ndarray) -> tuple[float, float]:
+    pred, y = np.asarray(pred, float), np.asarray(y, float)
+    ss_res = float(np.sum((pred - y) ** 2))
+    ss_tot = float(np.sum((y - y.mean()) ** 2)) or 1e-9
+    return 1.0 - ss_res / ss_tot, float(np.sqrt(np.mean((pred - y) ** 2)))
+
+
+def make_train_step(e: EstimatorConfig, opt: AdamW):
+    @jax.jit
+    def step(params, opt_state, batch, key):
+        def loss_fn(p):
+            pred = estimator_forward(e, p, batch["kpms"], batch["iq"],
+                                     batch["alloc"], train=True, key=key)
+            return jnp.mean((pred - batch["tp"]) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return step
+
+
+def train_estimator(e: EstimatorConfig, data: dict, *, steps: int = 300,
+                    batch: int = 32, lr: float = 1e-3, seed: int = 0,
+                    log_every: int = 50, eval_data: dict | None = None):
+    key = jax.random.PRNGKey(seed)
+    params = init_estimator(e, key)
+    opt = AdamW(lr=lr, weight_decay=1e-4, clip_norm=1.0)
+    opt_state = opt.init(params)
+    step_fn = make_train_step(e, opt)
+    n = len(data["tp"])
+    rng = np.random.default_rng(seed)
+    history = []
+    for i in range(steps):
+        idx = rng.integers(0, n, batch)
+        mb = {k: jnp.asarray(v[idx]) for k, v in data.items()
+              if k in ("kpms", "iq", "alloc", "tp")}
+        key, sub = jax.random.split(key)
+        params, opt_state, loss = step_fn(params, opt_state, mb, sub)
+        if i % log_every == 0 or i == steps - 1:
+            history.append((i, float(loss)))
+    metrics = None
+    if eval_data is not None:
+        pred = predict(e, params, eval_data)
+        metrics = r2_rmse(pred, eval_data["tp"])
+    return params, history, metrics
+
+
+@partial(jax.jit, static_argnums=0)
+def _fwd(e, params, kpms, iq, alloc):
+    return estimator_forward(e, params, kpms, iq, alloc)
+
+
+def predict(e: EstimatorConfig, params, data: dict,
+            batch: int = 64) -> np.ndarray:
+    outs = []
+    n = len(data["tp"])
+    for i in range(0, n, batch):
+        outs.append(np.asarray(_fwd(
+            e, params, jnp.asarray(data["kpms"][i:i + batch]),
+            jnp.asarray(data["iq"][i:i + batch]),
+            jnp.asarray(data["alloc"][i:i + batch]))))
+    return np.concatenate(outs)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships three files: kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper), ref.py (pure-jnp oracle). On this
+CPU container they execute via interpret=True; on TPU set interpret=False.
+
+  flash_attention  tiled online-softmax attention (causal / SWA / GQA)
+  dcor             pairwise-distance tiles for distance correlation
+  ssd              Mamba2 state-space-dual chunk scan (VMEM-resident state)
+  quant            rowwise symmetric int8 quantisation
+"""
+from repro.kernels import dcor, flash_attention, quant, ssd  # noqa: F401

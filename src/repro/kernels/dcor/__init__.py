@@ -1,0 +1,3 @@
+from repro.kernels.dcor.kernel import pairwise_dists  # noqa: F401
+from repro.kernels.dcor.ops import dcor_kernel  # noqa: F401
+from repro.kernels.dcor.ref import pairwise_dists_ref  # noqa: F401

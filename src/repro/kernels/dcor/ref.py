@@ -1,0 +1,12 @@
+"""jnp oracle for the pairwise-distance kernel (dCor hot spot)."""
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def pairwise_dists_ref(x):
+    """x: (n, d) -> (n, n) Euclidean distances."""
+    x = x.astype(F32)
+    sq = jnp.sum(x * x, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    """q,k,v: (BH, S, dh) (kv heads pre-broadcast). Returns (BH, S, dh)."""
+    _, Sq, dh = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else dh**-0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(F32), k.astype(F32)) * scale
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= qp - kp < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(F32)).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.quant.kernel import quantize  # noqa: F401
+from repro.kernels.quant.ops import dequantize_rows, quantize_rows  # noqa: F401
+from repro.kernels.quant.ref import dequantize_ref, quantize_ref  # noqa: F401

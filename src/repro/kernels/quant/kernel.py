@@ -1,0 +1,51 @@
+"""Rowwise symmetric int8 quantisation as a Pallas kernel.
+
+Used at the split boundary (core/boundary codec), for compressed gradient
+all-reduce (optim/compress), and the int8 KV-cache option. One (block_rows,
+d) tile per grid step; absmax + scale + round happen entirely in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, *, qmax):
+    x = x_ref[...].astype(F32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def quantize(x, *, qmax: int = 127, block_rows: int = 256,
+             interpret: bool = True):
+    """x: (n, d) -> (q int8 (n, d), scale f32 (n, 1))."""
+    n, d = x.shape
+    block_rows = min(block_rows, n)
+    pad = (-n) % block_rows
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    npad = x.shape[0]
+    kernel = functools.partial(_quant_kernel, qmax=qmax)
+    q, s = pl.pallas_call(
+        kernel,
+        grid=(npad // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, d), jnp.int8),
+            jax.ShapeDtypeStruct((npad, 1), F32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q[:n], s[:n]

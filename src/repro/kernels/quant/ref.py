@@ -1,0 +1,16 @@
+"""jnp oracle for the int8 quantisation kernel."""
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def quantize_ref(x, qmax: int = 127):
+    """Rowwise symmetric int8: x (..., d) -> (q int8, scale (..., 1) f32)."""
+    amax = jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x.astype(F32) / scale), -qmax - 1, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_ref(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(F32) * scale).astype(dtype)

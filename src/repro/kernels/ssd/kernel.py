@@ -1,0 +1,107 @@
+"""Mamba2 SSD as a Pallas TPU kernel.
+
+Grid (B*G, nc): the chunk axis is innermost/sequential, so the running
+inter-chunk state (hpg, hd, N) lives in VMEM scratch across chunk steps —
+the XLA fallback materialises every chunk's (L, L) decay matrices in HBM
+(the 23GB temp observed on mamba2 train_4k); here one (L, L) tile exists
+per head-group at a time, in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, sout_ref, s_ref,
+                *, n_chunks, hpg, hd, N, L):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[...].astype(F32)  # (L, hpg, hd)
+    dt = dt_ref[...].astype(F32)  # (L, hpg)
+    A = a_ref[...].astype(F32)  # (hpg,)
+    Bv = b_ref[...].astype(F32)  # (L, N)
+    Cv = c_ref[...].astype(F32)  # (L, N)
+
+    dA = dt * A[None]  # (L, hpg)
+    lcum = jnp.cumsum(dA, axis=0)
+    CB = jax.lax.dot_general(Cv, Bv, (((1,), (1,)), ((), ())),
+                             preferred_element_type=F32)  # (L, L) [t,s]
+    decay = lcum[:, None, :] - lcum[None, :, :]  # (t, s, hpg)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= (
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    M = jnp.where(tri[..., None], jnp.exp(decay), 0.0) * CB[..., None]
+    du = dt[:, :, None] * x  # (L, hpg, hd)
+    y_intra = jnp.einsum("tsh,shd->thd", M, du, preferred_element_type=F32)
+    # inter-chunk: contribution of the carried state
+    qdecay = jnp.exp(lcum)  # (L, hpg)
+    s_prev = s_ref[...]  # (hpg, hd, N)
+    y_inter = jnp.einsum("tn,hdn->thd", Cv, s_prev,
+                         preferred_element_type=F32) * qdecay[:, :, None]
+    y_ref[...] = (y_intra + y_inter).astype(y_ref.dtype)
+    # state update
+    lend = lcum[-1]  # (hpg,)
+    sdecay = jnp.exp(lend[None] - lcum)  # (L, hpg)
+    S_c = jnp.einsum("tn,thd->hdn", Bv, du * sdecay[:, :, None],
+                     preferred_element_type=F32)
+    s_ref[...] = s_prev * jnp.exp(lend)[:, None, None] + S_c
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        sout_ref[...] = s_ref[...]
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool = True):
+    """x: (B,S,nh,hd); dt: (B,S,nh); A: (nh,); Bm/Cm: (B,S,G,N).
+    Returns (y (B,S,nh,hd), state (B,G,hpg,hd,N))."""
+    B, S, nh, hd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = nh // G
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+    # regroup to (B*G, S, hpg, ...) so one grid cell owns one B/C group
+    xg = x.reshape(B, S, G, hpg, hd).transpose(0, 2, 1, 3, 4).reshape(
+        B * G, S, hpg, hd)
+    dtg = dt.reshape(B, S, G, hpg).transpose(0, 2, 1, 3).reshape(
+        B * G, S, hpg)
+    Ag = A.reshape(G, hpg)
+    Ag = jnp.broadcast_to(Ag[None], (B, G, hpg)).reshape(B * G, hpg)
+    Bg = Bm.transpose(0, 2, 1, 3).reshape(B * G, S, N)
+    Cg = Cm.transpose(0, 2, 1, 3).reshape(B * G, S, N)
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc, hpg=hpg, hd=hd,
+                               N=N, L=L)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B * G, nc),
+        in_specs=[
+            pl.BlockSpec((None, L, hpg, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((None, L, hpg), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, hpg), lambda b, c: (b, 0)),
+            pl.BlockSpec((None, L, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, L, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, L, hpg, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((None, hpg, hd, N), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * G, S, hpg, hd), x.dtype),
+            jax.ShapeDtypeStruct((B * G, hpg, hd, N), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hpg, hd, N), F32)],
+        interpret=interpret,
+    )(xg, dtg, Ag, Bg, Cg)
+    y = y.reshape(B, G, S, hpg, hd).transpose(0, 2, 1, 3, 4).reshape(
+        B, S, nh, hd)
+    state = state.reshape(B, G, hpg, hd, N)
+    return y, state

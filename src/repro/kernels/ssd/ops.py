@@ -1,0 +1,17 @@
+"""jit wrapper for the SSD kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd
+from repro.kernels.ssd.ref import ssd_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_kernel", "interpret"))
+def ssd_mixer(x, dt, A, Bm, Cm, *, chunk=256, use_kernel=True,
+              interpret=True):
+    if use_kernel:
+        return ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+    return ssd_ref(x, dt, A, Bm, Cm, chunk)

@@ -1,0 +1,50 @@
+"""jnp oracle for the Mamba2 SSD (state-space dual) chunk kernel.
+
+Inputs are the post-projection, post-conv tensors of one sequence:
+  x  (B, S, nh, hd)   value-like stream
+  dt (B, S, nh)       softplus-discretised step sizes
+  A  (nh,)            negative per-head decay rates
+  Bm (B, S, G, N)     input-expansion vectors (ngroups G)
+  Cm (B, S, G, N)     output-contraction vectors
+Output: y (B, S, nh, hd) and final state (B, G, nh//G, hd, N).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def ssd_ref(x, dt, A, Bm, Cm, chunk: int):
+    B, S, nh, hd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = nh // G
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+    xc = x.astype(F32).reshape(B, nc, L, G, hpg, hd)
+    dtc = dt.astype(F32).reshape(B, nc, L, nh)
+    Bc = Bm.astype(F32).reshape(B, nc, L, G, N)
+    Cc = Cm.astype(F32).reshape(B, nc, L, G, N)
+    dA = dtc * A.astype(F32)
+    lcum = jnp.cumsum(dA, axis=2)  # (B,nc,L,nh)
+    CB = jnp.einsum("bclgn,bcmgn->bcglm", Cc, Bc)
+    decay = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]  # (B,nc,t,s,nh)
+    decay = jnp.transpose(decay, (0, 1, 4, 2, 3))
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    M = jnp.where(tri, jnp.exp(decay), 0.0).reshape(B, nc, G, hpg, L, L)
+    M = M * CB[:, :, :, None]
+    du = dtc.reshape(B, nc, L, G, hpg)[..., None] * xc
+    y_intra = jnp.einsum("bcghts,bcsghd->bctghd", M, du)
+    lend = lcum[:, :, -1:, :]
+    sdecay = jnp.exp(lend - lcum).reshape(B, nc, L, G, hpg)
+    S_c = jnp.einsum("bcsgn,bcsghd->bcghdn", Bc, du * sdecay[..., None])
+    cd = jnp.exp(lend[:, :, 0]).reshape(B, nc, G, hpg)
+    states = [jnp.zeros((B, G, hpg, hd, N), F32)]
+    for c in range(nc):
+        states.append(states[-1] * cd[:, c][..., None, None] + S_c[:, c])
+    s_prev = jnp.stack(states[:-1], axis=1)  # (B,nc,G,hpg,hd,N)
+    qdecay = jnp.exp(lcum).reshape(B, nc, L, G, hpg)
+    y_inter = jnp.einsum("bctgn,bcghdn->bctghd", Cc, s_prev) * qdecay[..., None]
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    return y.astype(x.dtype), states[-1]

@@ -1,0 +1,94 @@
+"""Split-serving launcher: the paper's UE/edge boundary at pod scale.
+
+--dry-run: builds the multi-pod production mesh, slices it into the UE pod
+(pod 0) and edge pod (pod 1), lowers + compiles the HEAD program on the UE
+submesh and the TAIL program on the edge submesh for every valid split
+point, and reports the boundary traffic per codec. This is deliverable (e)'s
+split-serving mode: two runtimes + an explicit inter-pod link, exactly how
+a disaggregated deployment runs.
+
+Usage:
+  python -m repro.launch.serve --dry-run --arch granite-8b --split 18
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs import get_config
+from repro.core import boundary
+from repro.core.splitting import lm_head, lm_split_points, lm_tail
+from repro.dist import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import COMPILER_OPTS, serve_overrides
+from repro.models import abstract_params
+from repro.models.template import shardings_from_template
+from repro.models import lm as lmmod
+from repro.launch.steps import serve_param_template
+
+
+def pod_submesh(mesh, pod: int) -> Mesh:
+    return Mesh(mesh.devices[pod], ("data", "model"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--split", type=int, default=None,
+                    help="megablock split index (default: middle)")
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--codec", default="int8", choices=["fp16", "int8", "int4"])
+    ap.add_argument("--dry-run", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    ks = lm_split_points(cfg)
+    k = args.split if args.split is not None else ks[len(ks) // 2]
+    assert k in ks, f"split {k} not in {ks}"
+    codec = {"fp16": boundary.FP16, "int8": boundary.INT8,
+             "int4": boundary.INT4}[args.codec]
+
+    mesh = make_production_mesh(multi_pod=True)
+    ue, edge = pod_submesh(mesh, 0), pod_submesh(mesh, 1)
+    overrides = serve_overrides(cfg)
+    batch_abs = {"tokens": jax.ShapeDtypeStruct((args.batch, args.seq),
+                                                jnp.int32)}
+    if cfg.vision_dim:
+        batch_abs["vision"] = jax.ShapeDtypeStruct(
+            (args.batch, cfg.vision_tokens, cfg.vision_dim), jnp.bfloat16)
+
+    tmpl = serve_param_template(cfg)
+    results = {"arch": args.arch, "split": k, "codec": args.codec}
+    with sh.use_rules(ue, overrides) as rs:
+        pabs = abstract_params(cfg)
+        psh = shardings_from_template(tmpl, rs)
+        head = jax.jit(lambda p, b: lm_head(cfg, p, b, k),
+                       in_shardings=(psh, None))
+        lowered = head.lower(pabs, batch_abs)
+        compiled = lowered.compile(COMPILER_OPTS)
+        results["head_memory"] = str(compiled.memory_analysis())
+        act_abs = jax.eval_shape(lambda p, b: lm_head(cfg, p, b, k),
+                                 pabs, batch_abs)
+    results["boundary_bytes"] = boundary.transmit_bytes(act_abs.shape, codec)
+    with sh.use_rules(edge, overrides) as rs:
+        psh = shardings_from_template(tmpl, rs)
+        tail = jax.jit(lambda p, a, b: lm_tail(cfg, p, a, b, k),
+                       in_shardings=(psh, None, None))
+        compiled = tail.lower(pabs, act_abs, batch_abs).compile(COMPILER_OPTS)
+        results["tail_memory"] = str(compiled.memory_analysis())
+    ici_bw = 50e9
+    results["boundary_transfer_ms"] = round(
+        results["boundary_bytes"] / ici_bw * 1e3, 3)
+    print(json.dumps(results, indent=1))
+
+
+if __name__ == "__main__":
+    main()

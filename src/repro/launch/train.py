@@ -1,0 +1,45 @@
+"""Training launcher: ``python -m repro.launch.train --arch granite-8b
+--reduced --steps 50 [--resume]``.
+
+Full configs target the production mesh (real TPU job); --reduced runs the
+same code path on host devices for CI / examples.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tc = TrainerConfig(seq=args.seq, global_batch=args.global_batch,
+                       steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every, lr=args.lr,
+                       grad_accum=args.grad_accum)
+    trainer = Trainer(cfg, tc)
+    _, hist = trainer.run(resume=args.resume)
+    for s, l in hist[:: max(1, len(hist) // 10)]:
+        print(f"step {int(s):5d} loss {l:.4f}")
+    print(f"final loss {hist[-1, 1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+import jax
+
+from repro.models import blocks, lm  # noqa: F401
+from repro.models.template import (  # noqa: F401
+    abstract_from_template,
+    init_from_template,
+    shardings_from_template,
+    specs_from_template,
+)
+
+
+def init_params(cfg, key):
+    return init_from_template(lm.model_template(cfg), key)
+
+
+def abstract_params(cfg):
+    return abstract_from_template(lm.model_template(cfg))
+
+
+def init_cache(cfg, batch, max_seq, key=None):
+    tmpl = lm.cache_template(cfg, batch, max_seq)
+    return init_from_template(tmpl, key or jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg, batch, max_seq):
+    return abstract_from_template(lm.cache_template(cfg, batch, max_seq))

@@ -1,0 +1,294 @@
+"""Pattern-grouped LM: scan over repeated megablocks + unrolled remainder.
+
+Covers every assigned architecture through ModelConfig.pattern:
+dense / MoE / SWA / local:global / cross-attn VLM / RG-LRU hybrid / SSD.
+
+Modes: train & prefill are full-sequence; decode is single-token with a
+cache pytree that mirrors the parameter grouping.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import constrain
+from repro.models import blocks as B
+from repro.models.template import ParamSpec, stack_specs
+
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------------ templates
+def block_template(cfg, spec):
+    if spec.kind in ("attn", "local", "cross"):
+        t = {"attn": B.attn_template(cfg, spec.kind)}
+        t["ffn"] = B.moe_template(cfg) if cfg.is_moe else B.mlp_template(cfg)
+        return t
+    if spec.kind == "rec":
+        return {"rec": B.rec_template(cfg), "ffn": B.mlp_template(cfg)}
+    if spec.kind == "ssd":
+        return {"ssd": B.ssd_template(cfg)}
+    raise ValueError(spec.kind)
+
+
+def model_template(cfg):
+    D = cfg.d_model
+    t = {}
+    if cfg.frame_input_dim:
+        t["embed"] = ParamSpec((cfg.frame_input_dim, D), ("fsdp", "embed"))
+    else:
+        t["embed"] = ParamSpec((cfg.vocab, D), ("vocab", "fsdp"), init="embed")
+    n_full = cfg.n_full_patterns
+    t["groups"] = tuple(
+        stack_specs(block_template(cfg, b), n_full) for b in cfg.pattern
+    )
+    t["rem"] = tuple(block_template(cfg, b) for b in cfg.remainder)
+    t["final_ln"] = ParamSpec((D,), ("embed",), init="zeros")
+    if not cfg.tie_embeddings and not cfg.frame_input_dim:
+        t["head"] = ParamSpec((D, cfg.vocab), ("fsdp", "vocab"))
+    elif cfg.frame_input_dim:
+        t["head"] = ParamSpec((D, cfg.vocab), ("fsdp", "vocab"))
+    return t
+
+
+def block_cache_template(cfg, spec, batch, max_seq):
+    if spec.kind in ("attn", "local", "cross"):
+        return {"attn": B.attn_cache_template(cfg, batch, max_seq, spec.window,
+                                              spec.kind)}
+    if spec.kind == "rec":
+        return {"rec": B.rec_cache_template(cfg, batch)}
+    if spec.kind == "ssd":
+        return {"ssd": B.ssd_cache_template(cfg, batch)}
+    raise ValueError(spec.kind)
+
+
+def cache_template(cfg, batch, max_seq):
+    n_full = cfg.n_full_patterns
+    return {
+        "groups": tuple(
+            stack_specs(block_cache_template(cfg, b, batch, max_seq), n_full)
+            for b in cfg.pattern
+        ),
+        "rem": tuple(
+            block_cache_template(cfg, b, batch, max_seq) for b in cfg.remainder
+        ),
+    }
+
+
+# ------------------------------------------------------------------ block apply
+def _res(x):
+    """Residual-stream carry constraint: logical 'ctx' maps to None by
+    default; overriding ctx->'model' turns on sequence parallelism for the
+    inter-block activations (Megatron-SP style gather/reduce-scatter)."""
+    return constrain(x, ("batch", "ctx", "embed"))
+
+
+def _apply_ffn(cfg, p, x, dtype):
+    """Returns (x, aux)."""
+    if cfg.is_moe:
+        delta, aux = B.moe_block(cfg, p["ffn"], x, dtype)
+        return _res(x + delta), aux
+    return _res(x + B.mlp_block(cfg, p["ffn"], x, dtype)), 0.0
+
+
+def apply_block(cfg, spec, p, x, *, mode, cache=None, pos=None, positions=None,
+                vision=None, dtype=jnp.bfloat16, max_seq=None):
+    """Apply one block. Returns (x, aux, new_cache)."""
+    aux = 0.0
+    if spec.kind in ("attn", "local", "cross"):
+        kw = dict(kind=spec.kind, window=spec.window, dtype=dtype)
+        if mode == "decode":
+            delta, new_cache = B.attention_decode(cfg, p["attn"], x,
+                                                  cache["attn"], pos, **kw)
+        elif mode == "prefill":
+            delta, new_cache = B.attention_block(
+                cfg, p["attn"], x, positions=positions, cross_kv=vision,
+                return_cache=True, max_seq=max_seq, **kw)
+            new_cache = {"attn": new_cache}
+        else:
+            delta = B.attention_block(cfg, p["attn"], x, positions=positions,
+                                      cross_kv=vision, **kw)
+            new_cache = None
+        if mode == "decode":
+            new_cache = {"attn": new_cache}
+        x = _res(x + delta)
+        x, aux = _apply_ffn(cfg, p, x, dtype)
+    elif spec.kind == "rec":
+        if mode == "decode":
+            delta, st = B.rec_decode(cfg, p["rec"], x, cache["rec"], dtype)
+        else:
+            delta, st = B.rec_block(cfg, p["rec"], x, dtype)
+        x = _res(x + delta)
+        x, aux = _apply_ffn(cfg, p, x, dtype)
+        new_cache = {"rec": st} if mode != "train" else None
+    elif spec.kind == "ssd":
+        if mode == "decode":
+            delta, st = B.ssd_decode(cfg, p["ssd"], x, cache["ssd"], dtype)
+        else:
+            delta, st = B.ssd_block(cfg, p["ssd"], x, dtype)
+        x = _res(x + delta)
+        new_cache = {"ssd": st} if mode != "train" else None
+    else:
+        raise ValueError(spec.kind)
+    return x, aux, new_cache
+
+
+# ------------------------------------------------------------------ embeddings
+def embed_in(cfg, params, batch, dtype):
+    if cfg.frame_input_dim:
+        x = B.cast(batch["frames"], dtype) @ B.cast(params["embed"], dtype)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dtype)
+        if cfg.tie_embeddings:
+            x = x * jnp.asarray(cfg.d_model**0.5, dtype)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def logits_out(cfg, params, x, dtype):
+    h = B.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if "head" in params:
+        logits = h @ B.cast(params["head"], dtype)
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", h, B.cast(params["embed"], dtype))
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(B.cast(logits, F32) / c)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+# ------------------------------------------------------------------ forward
+def forward(cfg, params, batch, *, mode="train", dtype=jnp.bfloat16,
+            remat="full", logits_mode="all", max_seq=None, unroll=False):
+    """Full-sequence pass.
+
+    mode: 'train' | 'prefill'. logits_mode: 'all' | 'last' | 'none'.
+    max_seq sizes the decode cache a prefill produces.
+    Returns (logits, aux, cache) — cache is None for train."""
+    x = embed_in(cfg, params, batch, dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+    vision = batch.get("vision")
+
+    def group_body(carry, gparams):
+        x, aux = carry
+        caches = []
+        for i, spec in enumerate(cfg.pattern):
+            x, a, c = apply_block(cfg, spec, gparams[i], x, mode=mode,
+                                  positions=positions, vision=vision,
+                                  dtype=dtype, max_seq=max_seq)
+            aux = aux + jnp.asarray(a, F32)
+            caches.append(c)
+        out = tuple(caches) if mode == "prefill" else None
+        return (x, aux), out
+
+    body = group_body
+    if remat == "full":
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            group_body, prevent_cse=False,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    if unroll:
+        carry = (x, jnp.zeros((), F32))
+        ys = []
+        for i in range(cfg.n_full_patterns):
+            gp = jax.tree.map(lambda t: t[i], params["groups"])
+            carry, y = body(carry, gp)
+            ys.append(y)
+        (x, aux) = carry
+        group_caches = (jax.tree.map(lambda *t: jnp.stack(t), *ys)
+                        if ys and ys[0] is not None else None)
+    else:
+        (x, aux), group_caches = lax.scan(body, (x, jnp.zeros((), F32)),
+                                          params["groups"])
+    rem_caches = []
+    for spec, p in zip(cfg.remainder, params["rem"]):
+        x, a, c = apply_block(cfg, spec, p, x, mode=mode, positions=positions,
+                              vision=vision, dtype=dtype, max_seq=max_seq)
+        aux = aux + a
+        rem_caches.append(c)
+
+    cache = None
+    if mode == "prefill":
+        cache = {"groups": group_caches, "rem": tuple(rem_caches)}
+    if logits_mode == "none":
+        return None, aux, cache
+    if logits_mode == "last":
+        x = x[:, -1:]
+    logits = logits_out(cfg, params, x, dtype)
+    return logits, aux, cache
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, dtype=jnp.bfloat16,
+                unroll=False):
+    """One decode step. tokens: (B,1) int32 (or frames); pos: scalar int32.
+    Returns (logits (B,1,V), new_cache).
+
+    The stacked cache rides in the scan CARRY and is updated with
+    dynamic_update_index in place — carrying it as xs->ys would double-buffer
+    the entire KV cache."""
+    x = embed_in(cfg, params, {"tokens": tokens}, dtype)
+
+    def layer_at(gcaches, idx):
+        return jax.tree.map(
+            lambda t: lax.dynamic_index_in_dim(t, idx, 0, keepdims=False),
+            gcaches)
+
+    def write_at(gcaches, idx, new):
+        return jax.tree.map(
+            lambda full, n: lax.dynamic_update_index_in_dim(
+                full, n.astype(full.dtype), idx, 0), gcaches, new)
+
+    def group_body(carry, xs):
+        x, gcaches = carry
+        gparams, idx = xs
+        gcaches = list(gcaches)
+        for i, spec in enumerate(cfg.pattern):
+            x, _, c = apply_block(cfg, spec, gparams[i], x, mode="decode",
+                                  cache=layer_at(gcaches[i], idx), pos=pos,
+                                  dtype=dtype)
+            gcaches[i] = write_at(gcaches[i], idx, c)
+        return (x, tuple(gcaches)), None
+
+    xs = (params["groups"], jnp.arange(cfg.n_full_patterns, dtype=jnp.int32))
+    if unroll:
+        carry = (x, cache["groups"])
+        for i in range(cfg.n_full_patterns):
+            carry, _ = group_body(carry, jax.tree.map(lambda t: t[i], xs))
+        x, group_caches = carry
+    else:
+        (x, group_caches), _ = lax.scan(group_body, (x, cache["groups"]), xs)
+    rem_caches = []
+    for spec, p, c in zip(cfg.remainder, params["rem"], cache["rem"]):
+        x, _, nc = apply_block(cfg, spec, p, x, mode="decode", cache=c,
+                               pos=pos, dtype=dtype)
+        rem_caches.append(nc)
+    logits = logits_out(cfg, params, x, dtype)
+    return logits, {"groups": group_caches, "rem": tuple(rem_caches)}
+
+
+# ------------------------------------------------------------------ loss
+def lm_loss(cfg, params, batch, *, dtype=jnp.bfloat16, remat="full",
+            aux_weight=0.01, unroll=False):
+    logits, aux, _ = forward(cfg, params, batch, mode="train", dtype=dtype,
+                             remat=remat, unroll=unroll)
+    labels = batch["labels"]
+    V = logits.shape[-1]
+    lse = jax.nn.logsumexp(logits.astype(F32), axis=-1)
+    onehot = jax.nn.one_hot(labels, V, dtype=logits.dtype)
+    picked = jnp.einsum("bsv,bsv->bs", onehot, logits).astype(F32)
+    nll = lse - picked
+    mask = batch.get("mask")
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = nll.size
+    loss = nll.sum() / denom
+    if cfg.is_moe:
+        loss = loss + aux_weight * aux / max(cfg.n_layers, 1)
+    return loss, {"nll": loss, "aux": aux}

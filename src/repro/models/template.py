@@ -1,0 +1,120 @@
+"""Parameter templates: single source of truth for shapes, init, sharding.
+
+A template is a pytree whose leaves are ParamSpec. From it we derive
+  * real initialized params      (init_from_template)
+  * ShapeDtypeStruct stand-ins   (abstract_from_template; for the dry-run)
+  * NamedSharding trees          (shardings_from_template, under a Ruleset)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as sh
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple  # logical axis names (len == ndim)
+    dtype: jnp.dtype = jnp.float32
+    init: str = "fan_in"  # fan_in | zeros | ones | normal | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def stack_specs(tree, n: int, axis_name: str = "layers"):
+    """Add a leading stacked-layers dim of size n to every leaf."""
+    return jax.tree.map(
+        lambda s: dataclasses.replace(
+            s, shape=(n,) + s.shape, axes=(axis_name,) + s.axes
+        ),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def _init_leaf(spec: ParamSpec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "neg_ones":
+        return -jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return spec.scale * jax.random.normal(key, spec.shape, spec.dtype)
+    if spec.init == "embed":
+        return jax.random.normal(key, spec.shape, spec.dtype)
+    if spec.init == "fan_in":
+        # fan-in = second-to-last dim for matrices (ignoring stacked dims)
+        fan = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / max(fan, 1) ** 0.5
+        return std * jax.random.normal(key, spec.shape, spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_from_template(tree, key) -> dict:
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    paths = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)[0]
+    out = []
+    for (path, spec) in paths:
+        k = jax.random.fold_in(key, _path_hash(path))
+        out.append(_init_leaf(spec, k))
+    del leaves
+    return jax.tree.unflatten(treedef, out)
+
+
+def _path_hash(path) -> int:
+    s = jax.tree_util.keystr(path)
+    h = 2166136261
+    for ch in s.encode():
+        h = (h ^ ch) * 16777619 % (1 << 31)
+    return h
+
+
+def abstract_from_template(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def specs_from_template(tree, ruleset: Optional[sh.Ruleset] = None):
+    """PartitionSpec tree (requires an active or explicit Ruleset)."""
+    rs = ruleset or sh.active()
+    assert rs is not None, "specs_from_template needs a Ruleset"
+    return jax.tree.map(
+        lambda s: rs.spec(s.axes, s.shape), tree, is_leaf=is_spec
+    )
+
+
+def shardings_from_template(tree, ruleset: Optional[sh.Ruleset] = None):
+    rs = ruleset or sh.active()
+    assert rs is not None, "shardings_from_template needs a Ruleset"
+    return jax.tree.map(
+        lambda s: rs.sharding(s.axes, s.shape), tree, is_leaf=is_spec
+    )
+
+
+def nbytes(tree) -> int:
+    return sum(
+        int(jnp.dtype(s.dtype).itemsize) * _prod(s.shape)
+        for s in jax.tree.leaves(tree, is_leaf=is_spec)
+    )
+
+
+def _prod(shape) -> int:
+    out = 1
+    for d in shape:
+        out *= int(d)
+    return out

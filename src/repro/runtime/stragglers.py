@@ -1,0 +1,52 @@
+"""Straggler mitigation: per-step wall-time watchdog.
+
+At 1000+ nodes, one slow host gates every synchronous collective. The
+watchdog keeps an EWMA/variance of step time; a step slower than
+`threshold`x the EWMA raises WARN, and `patience` consecutive WARNs raise
+EXCLUDE — the control plane's signal to checkpoint, drop the slow data-
+parallel group, and continue on a shrunken mesh (elastic restore path,
+tested in test_runtime.py)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class Action(enum.Enum):
+    NONE = 0
+    WARN = 1
+    EXCLUDE = 2
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    threshold: float = 2.0  # x EWMA to flag
+    patience: int = 3  # consecutive flags before EXCLUDE
+    alpha: float = 0.2  # EWMA weight
+    warmup: int = 5  # steps before judging
+
+    ewma: float = 0.0
+    seen: int = 0
+    strikes: int = 0
+    excluded: bool = False
+
+    def update(self, step_time_s: float) -> Action:
+        self.seen += 1
+        if self.seen <= self.warmup:
+            self.ewma = (step_time_s if self.seen == 1 else
+                         self.alpha * step_time_s +
+                         (1 - self.alpha) * self.ewma)
+            return Action.NONE
+        slow = step_time_s > self.threshold * self.ewma
+        # slow steps do not poison the baseline
+        if not slow:
+            self.ewma = (self.alpha * step_time_s +
+                         (1 - self.alpha) * self.ewma)
+            self.strikes = 0
+            return Action.NONE
+        self.strikes += 1
+        if self.strikes >= self.patience:
+            self.excluded = True
+            self.strikes = 0
+            return Action.EXCLUDE
+        return Action.WARN

@@ -1,0 +1,88 @@
+"""Fault-tolerant training driver.
+
+Checkpoint/restart: periodic async checkpoints; --resume restores the
+latest and, because the data pipeline is a pure function of step, the loss
+trajectory continues exactly. Failure injection (fail_at_step) exercises
+the restart path in tests. Straggler watchdog hooks per-step wall time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import make_batch_fn
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+from repro.optim import AdamW, cosine_schedule
+from repro.runtime.stragglers import Action, StragglerWatchdog
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    seq: int = 128
+    global_batch: int = 8
+    steps: int = 50
+    ckpt_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    lr: float = 3e-4
+    warmup: int = 10
+    seed: int = 0
+    remat: str = "none"
+    grad_accum: int = 1
+    fail_at_step: Optional[int] = None  # failure injection (tests)
+    keep: int = 3
+
+
+class Trainer:
+    def __init__(self, cfg, tc: TrainerConfig, *,
+                 on_straggler: Optional[Callable] = None):
+        self.cfg = cfg
+        self.tc = tc
+        self.opt = AdamW(lr=cosine_schedule(tc.lr, tc.warmup, tc.steps))
+        self.step_fn = jax.jit(
+            make_train_step(cfg, self.opt, remat=tc.remat,
+                            grad_accum=tc.grad_accum),
+            donate_argnums=(0,))
+        self.batch_at = make_batch_fn(cfg, tc.seq, tc.global_batch, tc.seed)
+        self.ckpt = CheckpointManager(tc.ckpt_dir, keep=tc.keep)
+        self.watchdog = StragglerWatchdog()
+        self.on_straggler = on_straggler
+        self.history: list[tuple[int, float]] = []
+
+    def init_state(self):
+        params = init_params(self.cfg, jax.random.PRNGKey(self.tc.seed))
+        return {"params": params, "opt": self.opt.init(params)}
+
+    def run(self, resume: bool = False):
+        state = self.init_state()
+        start = 0
+        if resume and self.ckpt.latest() is not None:
+            state, start = self.ckpt.restore(state)
+            start += 1
+        for step in range(start, self.tc.steps):
+            if self.tc.fail_at_step is not None and step == self.tc.fail_at_step:
+                self.ckpt.wait()
+                raise InjectedFailure(f"injected failure at step {step}")
+            t0 = time.time()
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.batch_at(step).items()}
+            state, metrics = self.step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            act = self.watchdog.update(dt)
+            if act is not Action.NONE and self.on_straggler:
+                self.on_straggler(step, act, dt)
+            self.history.append((step, loss))
+            if step % self.tc.ckpt_every == 0 or step == self.tc.steps - 1:
+                self.ckpt.save(step, state)
+        self.ckpt.wait()
+        return state, np.array(self.history)

@@ -1,0 +1,113 @@
+"""Channel simulator + throughput estimator tests (reduced IQ width)."""
+import numpy as np
+import pytest
+
+from repro.channel import iq as iqmod
+from repro.channel import kpm as kpmmod
+from repro.channel import scenarios as sc
+from repro.channel import throughput as tp
+from repro.estimator.baselines import ridge_fit, ridge_predict, summary_features
+from repro.estimator.model import EstimatorConfig, estimator_forward, init_estimator
+from repro.estimator.train import r2_rmse, train_estimator
+
+N_SC_TEST = 144  # reduced spectrogram height for CPU tests
+
+
+def test_throughput_decreasing_in_interference():
+    """Weak monotonicity: TPC may locally over-compensate by <0.5 Mbps, but
+    the trend across zones is strictly downward."""
+    xs = np.linspace(-60, 14, 200)
+    y = tp.max_throughput_mbps(xs)
+    assert np.all(np.diff(y) <= 0.5)
+    assert y[0] == pytest.approx(tp.PEAK_MBPS, rel=0.05)
+    zones = tp.max_throughput_mbps(np.array([-60.0, -10.0, 5.0, 12.0]))
+    assert np.all(np.diff(zones) < 0)
+    assert y[-1] < 6.0
+
+
+def test_zone_model_fig2a():
+    """High-load KPM behaviour per zone: TPC ramps in Power-Control, MCS
+    drops in MCS-Control, BLER saturates in OOC."""
+    assert tp.tpc_boost_db(np.array(-30.0)) == 0.0
+    assert tp.tpc_boost_db(np.array(-6.0)) > 10.0
+    assert tp.mcs_index(np.array(-25.0)) == 28
+    assert tp.mcs_index(np.array(7.0)) <= 3
+    assert tp.bler(np.array(-10.0)) == pytest.approx(0.1, abs=0.02)
+    assert tp.bler(np.array(12.0)) > 0.9
+
+
+def test_low_load_kpms_blind_to_interference():
+    """The paper's Fig. 2b observation: at low UL load the numerical KPMs
+    barely move while max achievable throughput collapses."""
+    rng = np.random.default_rng(0)
+    quiet = kpmmod.kpm_window(np.full(64, -60.0), 0.1, rng)
+    jammed = kpmmod.kpm_window(np.full(64, 5.0), 0.1, rng)
+    i_mcs = kpmmod.KPMS_15.index("ul_mcs")
+    i_tpc = kpmmod.KPMS_15.index("tpc")
+    assert abs(quiet[:, i_mcs].mean() - jammed[:, i_mcs].mean()) < 2.0
+    assert abs(quiet[:, i_tpc].mean() - jammed[:, i_tpc].mean()) < 2.0
+    tq = tp.max_throughput_mbps(np.array(-60.0))
+    tj = tp.max_throughput_mbps(np.array(5.0))
+    assert tj < 0.5 * tq
+
+
+def test_high_load_kpms_see_interference():
+    rng = np.random.default_rng(1)
+    quiet = kpmmod.kpm_window(np.full(64, -60.0), 0.95, rng)
+    jammed = kpmmod.kpm_window(np.full(64, 5.0), 0.95, rng)
+    i_mcs = kpmmod.KPMS_15.index("ul_mcs")
+    assert quiet[:, i_mcs].mean() - jammed[:, i_mcs].mean() > 10.0
+
+
+def test_spectrogram_reveals_interference_at_low_load():
+    rng = np.random.default_rng(2)
+    a = iqmod.spectrogram(-60.0, "none", 0.1, rng, n_sc=N_SC_TEST)
+    b = iqmod.spectrogram(5.0, "jamming", 0.1, rng, n_sc=N_SC_TEST)
+    assert b.shape == (2, N_SC_TEST, 14)
+    assert (b**2).mean() > 5 * (a**2).mean()
+
+
+@pytest.mark.parametrize("scen", sc.SCENARIOS)
+def test_episode_generation(scen):
+    rng = np.random.default_rng(3)
+    eps = sc.gen_episode(scen, 5, rng, n_sc=N_SC_TEST)
+    assert len(eps) == 5
+    s = eps[0]
+    assert s.kpms.shape == (sc.WINDOW, 15)
+    assert s.iq.shape == (2, N_SC_TEST, 14)
+    assert 0.5 <= s.tp_mbps <= tp.PEAK_MBPS + 1
+
+
+def test_estimator_forward_and_training_reduces_loss():
+    e = EstimatorConfig(n_sc=N_SC_TEST, lstm_hidden=32, hidden=32)
+    rng = np.random.default_rng(4)
+    data = sc.gen_dataset(30, rng, episode_len=10, n_sc=N_SC_TEST)
+    import jax
+    params = init_estimator(e, jax.random.PRNGKey(0))
+    pred = estimator_forward(e, params, data["kpms"][:4], data["iq"][:4],
+                             data["alloc"][:4])
+    assert pred.shape == (4,)
+    params, hist, _ = train_estimator(e, data, steps=60, batch=16,
+                                      log_every=20)
+    assert hist[-1][1] < hist[0][1] * 0.8
+
+
+def test_iq_features_beat_kpm_only_at_low_load():
+    """Miniature Table II: ridge on 7 KPMs < ridge on 15 KPMs (ties under
+    pure low-load) << IQ-aware estimator. Low-load regime only."""
+    e = EstimatorConfig(n_sc=N_SC_TEST, lstm_hidden=32, hidden=32)
+    rng = np.random.default_rng(5)
+    tr = sc.gen_dataset(60, rng, episode_len=12, low_load_only=True,
+                        n_sc=N_SC_TEST)
+    te = sc.gen_dataset(20, rng, episode_len=6, low_load_only=True,
+                        n_sc=N_SC_TEST)
+    r2s = {}
+    for fs in ("kpm7", "kpm15"):
+        w = ridge_fit(summary_features(tr["kpms"], fs), tr["tp"])
+        r2s[fs], _ = r2_rmse(ridge_predict(w, summary_features(te["kpms"], fs)),
+                             te["tp"])
+    params, _, (r2_iq, _) = train_estimator(e, tr, steps=250, batch=24,
+                                            eval_data=te, log_every=100)
+    assert r2_iq > r2s["kpm15"] - 0.02
+    assert r2_iq > r2s["kpm7"]
+    assert r2_iq > 0.5

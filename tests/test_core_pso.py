@@ -1,0 +1,147 @@
+"""PSO (Algorithm 1), objective, dCor, codec, controller tests — incl.
+hypothesis property tests pinning the vectorised PSO to the pseudocode."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import boundary
+from repro.core.controller import AdaptiveSplitController, ControllerConfig
+from repro.core.energy import EDGE_A40X2, UE_VM_2CORE, DeviceProfile
+from repro.core.objective import Constraints, Weights, evaluate
+from repro.core.privacy import dcor, pairwise_dists
+from repro.core.profiles import SplitProfile
+from repro.core.pso import NO_SPLIT, pso_reference, pso_vectorized
+from repro.models.vgg import vgg_split_profile, FULL
+
+
+def random_profile(rng, L=12):
+    flops = np.cumsum(rng.uniform(1e8, 5e9, L))
+    data = rng.uniform(1e4, 5e6, L)
+    priv = np.clip(np.sort(rng.uniform(0.2, 0.95, L))[::-1], 0, 1)
+    return SplitProfile("rand", flops, data, priv,
+                        [f"l{i}" for i in range(L)])
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(seed=st.integers(0, 10_000),
+                  tau=st.floats(0.05, 3.0),
+                  rho=st.floats(0.3, 1.0),
+                  emax=st.floats(0.5, 50.0))
+def test_pso_vectorized_matches_reference(seed, tau, rho, emax):
+    rng = np.random.default_rng(seed)
+    prof = random_profile(rng)
+    cons = Constraints(tau_max_s=tau, rho_max=rho, e_max_j=emax)
+    w = Weights(w_delay=1.0, w_privacy=0.5, w_energy=0.5)
+    ref = pso_reference(prof, UE_VM_2CORE, EDGE_A40X2, w, cons, 60)
+    vec = pso_vectorized(prof, UE_VM_2CORE, EDGE_A40X2, w, cons, 60)
+    np.testing.assert_array_equal(ref.table, vec.table)
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(seed=st.integers(0, 10_000))
+def test_pso_tables_respect_constraints(seed):
+    rng = np.random.default_rng(seed)
+    prof = random_profile(rng)
+    cons = Constraints(tau_max_s=1.0, rho_max=0.8, e_max_j=10.0)
+    w = Weights(1.0, 0.3, 0.3)
+    tab = pso_vectorized(prof, UE_VM_2CORE, EDGE_A40X2, w, cons, 80)
+    terms = evaluate(prof, UE_VM_2CORE, EDGE_A40X2,
+                     np.arange(1, 81) * 1e6, w, cons)
+    for tp in range(1, 81):
+        l = tab.table[tp]
+        if l != NO_SPLIT:
+            assert terms.feasible[l, tp - 1], (tp, l)
+
+
+def test_pso_delay_only_matches_bruteforce():
+    prof = vgg_split_profile(FULL)
+    cons = Constraints()
+    w = Weights(1.0, 0.0, 0.0)
+    tab = pso_vectorized(prof, UE_VM_2CORE, EDGE_A40X2, w, cons, 60)
+    terms = evaluate(prof, UE_VM_2CORE, EDGE_A40X2,
+                     np.arange(1, 61) * 1e6, w, cons)
+    brute = np.argmin(terms.d_e2e, axis=0)
+    np.testing.assert_array_equal(tab.table[1:], brute)
+
+
+def test_vgg_profile_pool_layers_shrink_data():
+    prof = vgg_split_profile(FULL)
+    pools = [i for i, n in enumerate(prof.layer_names) if ":pool" in n]
+    for i in pools:
+        assert prof.data_bytes[i] < prof.data_bytes[i - 1]
+    assert np.all(np.diff(prof.flops_head) >= 0)
+
+
+def test_deeper_split_higher_tp_shifts_earlier():
+    """Fig. 5d trend: as throughput degrades, the delay-optimal split moves
+    deeper (transmitting less / later beats transmitting early huge maps)."""
+    prof = vgg_split_profile(FULL)
+    w = Weights(1.0, 0.0, 0.0)
+    cons = Constraints(rho_max=0.98)  # SC semantics: raw input never leaves
+    tab = pso_vectorized(prof, UE_VM_2CORE, EDGE_A40X2, w, cons, 60)
+    assert tab.table[60] <= tab.table[15]
+    assert tab.table[15] > 1  # degraded link pushes the split deeper
+
+
+# ------------------------------------------------------------------ dCor
+def test_dcor_self_is_one():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 8))
+    assert abs(float(dcor(x, x)) - 1.0) < 1e-5
+
+
+def test_dcor_independent_is_small():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(k1, (128, 4))
+    y = jax.random.normal(k2, (128, 4))
+    assert float(dcor(x, y)) < 0.35
+
+
+def test_dcor_isometry_invariant():
+    k = jax.random.PRNGKey(2)
+    x = jax.random.normal(k, (48, 6))
+    y = x @ jnp.eye(6)[:, ::-1] + 3.0  # permutation + shift = isometry
+    assert abs(float(dcor(x, y)) - 1.0) < 1e-4
+
+
+def test_pairwise_dists_matches_numpy():
+    x = np.random.default_rng(3).normal(size=(20, 5)).astype(np.float32)
+    d = np.asarray(pairwise_dists(jnp.asarray(x)))
+    ref = np.linalg.norm(x[:, None] - x[None], axis=-1)
+    np.testing.assert_allclose(d, ref, atol=1e-4)
+
+
+# ------------------------------------------------------------------ codec
+@pytest.mark.parametrize("codec", [boundary.INT8, boundary.INT4])
+def test_codec_roundtrip_error(codec):
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 64)) * 3.0
+    y = boundary.roundtrip(x, codec)
+    rel = float(jnp.abs(y - x).max() / jnp.abs(x).max())
+    assert rel < (0.02 if codec.bits == 8 else 0.2)
+
+
+def test_codec_transmit_bytes():
+    assert boundary.transmit_bytes((4, 16, 128), boundary.INT8) == (
+        4 * 16 * 128 + 4 * 4 * 16)
+    assert boundary.transmit_bytes((2, 8, 64), boundary.FP16) == 2 * 8 * 64 * 2
+
+
+# ------------------------------------------------------------------ controller
+def test_controller_hysteresis():
+    prof = vgg_split_profile(FULL)
+    tab = pso_vectorized(prof, UE_VM_2CORE, EDGE_A40X2,
+                         Weights(1.0, 0.0, 0.0), Constraints(rho_max=0.98), 60)
+    ctl = AdaptiveSplitController(tab, ControllerConfig(
+        ewma_alpha=1.0, hysteresis_steps=2))
+    l60 = tab.query(60)
+    l5 = tab.query(5)
+    assert l60 != l5
+    ctl.update(60)
+    ctl.update(60)
+    assert ctl.current_split == l60
+    ctl.update(5)  # single blip: no switch yet
+    assert ctl.current_split == l60
+    ctl.update(5)
+    assert ctl.current_split == l5

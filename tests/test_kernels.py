@@ -1,0 +1,119 @@
+"""Per-kernel correctness: Pallas (interpret=True on CPU) vs jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dcor import dcor_kernel, pairwise_dists, pairwise_dists_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention, mha
+from repro.kernels.quant import dequantize_rows, quantize_ref, quantize_rows
+from repro.kernels.ssd import ssd, ssd_ref
+from repro.core.privacy import dcor as dcor_jnp
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ------------------------------------------------------------------ flash attn
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,dh,blocks", [(128, 64, (64, 64)),
+                                         (256, 32, (128, 64)),
+                                         (512, 64, (128, 128))])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 96)])
+def test_flash_attention_matches_ref(dtype, S, dh, blocks, causal, window):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    BH = 3
+    q = _rand(k1, (BH, S, dh), dtype)
+    k = _rand(k2, (BH, S, dh), dtype)
+    v = _rand(k3, (BH, S, dh), dtype)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        block_q=blocks[0], block_k=blocks[1])
+    r = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+def test_mha_gqa_wrapper():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, H, KV, dh = 2, 128, 8, 2, 32
+    q = _rand(k1, (B, S, H, dh), jnp.float32)
+    k = _rand(k2, (B, S, KV, dh), jnp.float32)
+    v = _rand(k3, (B, S, KV, dh), jnp.float32)
+    o = mha(q, k, v, causal=True, block_q=64, block_k=64)
+    r = mha(q, k, v, causal=True, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=3e-5,
+                               rtol=1e-4)
+
+
+# ------------------------------------------------------------------ dcor
+@pytest.mark.parametrize("n,d,bn,bd", [(64, 128, 32, 64), (100, 300, 64, 128),
+                                       (33, 70, 32, 512)])
+def test_pairwise_dists_kernel(n, d, bn, bd):
+    x = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+    got = pairwise_dists(x, block_n=bn, block_d=bd)
+    ref = pairwise_dists_ref(x)
+    # atol floor: ||a||^2+||b||^2-2ab cancels catastrophically near the
+    # diagonal in BOTH implementations; sqrt amplifies to ~1e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-2,
+                               rtol=1e-4)
+
+
+def test_dcor_kernel_end_to_end():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(k1, (48, 96))
+    y = x @ jax.random.normal(k2, (96, 32)) * 0.5
+    got = float(dcor_kernel(x, y))
+    ref = float(dcor_jnp(x, y))
+    assert abs(got - ref) < 1e-4
+
+
+# ------------------------------------------------------------------ ssd
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,L,nh,hd,G,N", [(64, 16, 4, 16, 1, 8),
+                                           (128, 32, 8, 32, 2, 16),
+                                           (96, 96, 2, 8, 1, 4)])
+def test_ssd_kernel_matches_ref(dtype, S, L, nh, hd, G, N):
+    keys = jax.random.split(jax.random.PRNGKey(4), 4)
+    B = 2
+    x = _rand(keys[0], (B, S, nh, hd), dtype)
+    dt = jax.nn.softplus(_rand(keys[1], (B, S, nh), jnp.float32)) * 0.5
+    A = -jnp.exp(jax.random.normal(keys[2], (nh,)) * 0.3)
+    Bm = _rand(keys[3], (B, S, G, N), dtype)
+    Cm = _rand(keys[0], (B, S, G, N), dtype)
+    y, st = ssd(x, dt, A, Bm, Cm, chunk=L)
+    yr, str_ = ssd_ref(x, dt, A, Bm, Cm, L)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(str_), atol=1e-3,
+                               rtol=1e-3)
+
+
+# ------------------------------------------------------------------ quant
+@pytest.mark.parametrize("shape", [(32, 64), (100, 128), (7, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_kernel_matches_ref(shape, dtype):
+    x = (_rand(jax.random.PRNGKey(5), shape, dtype) * 4).astype(dtype)
+    q, s = quantize_rows(x)
+    qr, sr = quantize_ref(x.reshape(-1, shape[-1]))
+    np.testing.assert_array_equal(np.asarray(q).reshape(qr.shape),
+                                  np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s).reshape(sr.shape),
+                               np.asarray(sr), rtol=1e-5)
+    y = dequantize_rows(q, s)
+    rel = float(jnp.max(jnp.abs(y.astype(jnp.float32) -
+                                x.astype(jnp.float32))))
+    assert rel <= float(s.max()) * 1.01
+
+
+def test_quant_roundtrip_error_bound():
+    """|x - dq(q(x))| <= scale/2 per element (hypothesis-style bound)."""
+    for seed in range(5):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (16, 32)) * (seed + 1)
+        q, s = quantize_rows(x)
+        y = dequantize_rows(q, s, jnp.float32)
+        err = jnp.abs(y - x)
+        assert float((err - s / 2 - 1e-6).max()) <= 0.0

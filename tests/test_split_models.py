@@ -1,0 +1,66 @@
+"""VGG16 + LM split-inference equivalence tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import boundary
+from repro.core.splitting import (lm_split_infer, lm_split_points, vgg_head,
+                                  vgg_split_infer, vgg_tail)
+from repro.models import init_params
+from repro.models.lm import forward
+from repro.models.vgg import REDUCED, forward as vgg_forward, init_vgg, layout
+
+
+def test_vgg_layout_has_43_split_points():
+    assert len(layout()) == 43
+
+
+def test_vgg_forward_shapes():
+    key = jax.random.PRNGKey(0)
+    params = init_vgg(REDUCED, key)
+    x = jax.random.normal(key, (2, REDUCED.image_size, REDUCED.image_size, 3))
+    out = vgg_forward(REDUCED, params, x)
+    assert out.shape == (2, REDUCED.num_classes)
+    acts = vgg_forward(REDUCED, params, x, collect=True)
+    assert len(acts) == 43
+
+
+@pytest.mark.parametrize("l", [1, 5, 17, 31, 34, 40])
+def test_vgg_split_equals_full(l):
+    key = jax.random.PRNGKey(1)
+    params = init_vgg(REDUCED, key)
+    x = jax.random.normal(key, (2, REDUCED.image_size, REDUCED.image_size, 3))
+    full = vgg_forward(REDUCED, params, x)
+    act = vgg_head(REDUCED, params, x, l)
+    split = vgg_tail(REDUCED, params, act, l)
+    np.testing.assert_allclose(np.asarray(split), np.asarray(full),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_vgg_split_int8_codec_close():
+    key = jax.random.PRNGKey(2)
+    params = init_vgg(REDUCED, key)
+    x = jax.random.normal(key, (2, REDUCED.image_size, REDUCED.image_size, 3))
+    full = vgg_forward(REDUCED, params, x)
+    out = vgg_split_infer(REDUCED, params, x, 17, codec=boundary.INT8)
+    # probabilities: small drift acceptable
+    assert float(jnp.abs(out - full).max()) < 0.05
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "mamba2-370m",
+                                  "recurrentgemma-2b"])
+def test_lm_split_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg, key)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab)}
+    ref, _, _ = forward(cfg, params, batch, mode="train", remat="none")
+    ref_last = ref[:, -1:]
+    ks = lm_split_points(cfg)
+    k = ks[len(ks) // 2]
+    out = lm_split_infer(cfg, params, batch, k, codec=boundary.FP16)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref_last, np.float32),
+                               rtol=0.1, atol=0.1)
