@@ -1,0 +1,16 @@
+# Tier-1 verification, wrapped so CI and humans run the same thing.
+#   make test   — the repo's tier-1 gate (full pytest suite)
+#   make smoke  — quickstart end-to-end (profile -> PSO -> controller -> split)
+#   make ci     — what .github/workflows/ci.yml runs on push
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test smoke ci
+
+test:
+	$(PY) -m pytest -x -q
+
+smoke:
+	$(PY) examples/quickstart.py --smoke
+
+ci: test smoke

@@ -6,9 +6,17 @@
    the split move; run the actual split inference at both operating points.
 
 Run: PYTHONPATH=src python examples/quickstart.py
+     (--smoke: CI mode — one operating point, same end-to-end path)
 """
+import argparse
+
 import jax
 import numpy as np
+
+ap = argparse.ArgumentParser(description="paper pipeline quickstart")
+ap.add_argument("--smoke", action="store_true",
+                help="CI mode: run a single operating point")
+ARGS = ap.parse_args()
 
 from repro.core import boundary
 from repro.core.controller import AdaptiveSplitController
@@ -42,7 +50,7 @@ for tp in [120, 118, 95, 60, 22, 9, 8, 7, 9, 8]:
 params = init_vgg(REDUCED, jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1),
                       (2, REDUCED.image_size, REDUCED.image_size, 3))
-for tp in (130, 8):
+for tp in ((130,) if ARGS.smoke else (130, 8)):
     l = table.query(tp)
     act = vgg_head(REDUCED, params, x, l)  # runs on the UE
     act = boundary.roundtrip(act, boundary.INT8)  # 4x smaller uplink

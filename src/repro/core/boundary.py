@@ -31,14 +31,24 @@ INT8 = Codec("int8", 8)
 INT4 = Codec("int4", 4)
 
 
-def quantize(x: jax.Array, bits: int):
-    """Symmetric per-channel (last dim) quantisation. Returns (q, scale)."""
-    assert bits in (4, 8)
-    qmax = 2 ** (bits - 1) - 1
+def rowwise_quant(x: jax.Array, qmax: int):
+    """Symmetric per-row (last dim) integer quantisation. Returns (q, scale).
+
+    The single home of the formula: the boundary codec, the KV-cache int8
+    path (models/blocks), and the Pallas kernel oracle (kernels/quant/ref)
+    all route here. Scale uses an explicit reciprocal multiply to stay
+    bit-identical with the Pallas kernel, whose fused divide-by-constant
+    XLA rewrites that way (a 1-ULP scale skew flips round())."""
     amax = jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / qmax
-    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int8)
-    return q, scale.astype(F32)
+    scale = jnp.maximum(amax, 1e-8) * jnp.float32(1.0 / qmax)
+    q = jnp.clip(jnp.round(x.astype(F32) / scale), -qmax - 1, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def quantize(x: jax.Array, bits: int):
+    """Split-boundary codec entry point. Returns (q, scale)."""
+    assert bits in (4, 8)
+    return rowwise_quant(x, 2 ** (bits - 1) - 1)
 
 
 def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):

@@ -26,10 +26,14 @@ class AdaptiveSplitController:
         self.cfg = cfg or ControllerConfig()
         self.tp_ewma: Optional[float] = None
         self.current_split: int = NO_SPLIT
-        self.pending_split: int = NO_SPLIT
+        self.pending_split: Optional[int] = None  # None = nothing pending
         self.pending_count = 0
         self.switches: list[tuple[int, float, int]] = []  # (step, tp, l)
         self._step = 0
+
+    def _clear_pending(self) -> None:
+        self.pending_split = None
+        self.pending_count = 0
 
     def update(self, tp_estimate_mbps: float) -> int:
         """Feed one estimator report; returns the split to use now."""
@@ -48,8 +52,12 @@ class AdaptiveSplitController:
             if self.pending_count >= self.cfg.hysteresis_steps:
                 self.current_split = proposal
                 self.switches.append((self._step, self.tp_ewma, proposal))
-                self.pending_count = 0
+                self._clear_pending()
         else:
-            self.pending_count = 0
+            # proposal reverted to the deployed split: drop the pending
+            # proposal entirely, not just its count — a stale pending_split
+            # would let a later lone agreeing report look like progress
+            # toward a switch that was already abandoned.
+            self._clear_pending()
         self._step += 1
         return self.current_split

@@ -14,10 +14,15 @@ F32 = jnp.float32
 
 
 def pairwise_dists(x: jax.Array) -> jax.Array:
-    """Euclidean distance matrix. x: (n, d) -> (n, n)."""
+    """Euclidean distance matrix. x: (n, d) -> (n, n).
+
+    Self-distances are pinned to exact 0: the ||a||^2+||b||^2-2ab
+    expansion cancels catastrophically on the diagonal and sqrt amplifies
+    the residue to ~1e-3."""
     x = x.astype(F32)
     sq = jnp.sum(x * x, axis=-1)
     d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    d2 = jnp.where(jnp.eye(x.shape[0], dtype=bool), 0.0, d2)
     return jnp.sqrt(jnp.maximum(d2, 0.0))
 
 

@@ -33,7 +33,11 @@ class LookupTable:
     feasible_prefilter: np.ndarray  # (L,) bool after privacy/energy filter
 
     def query(self, tp_mbps: float) -> int:
-        tp = int(np.clip(round(tp_mbps), 1, len(self.table) - 1))
+        """Rounded-bucket lookup. Near-zero throughput rounds to bucket 0,
+        which the sweep never fills (it starts at 1 Mbps) and therefore
+        reads NO_SPLIT — clamping up to bucket 1 would return a split
+        whose TP_min may be unmet at the actual throughput."""
+        tp = int(np.clip(round(tp_mbps), 0, len(self.table) - 1))
         return int(self.table[tp])
 
 

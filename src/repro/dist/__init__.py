@@ -1,0 +1,16 @@
+"""Distributed-execution layer: logical-axis sharding rules.
+
+``repro.dist.sharding`` is the single place where logical tensor axis
+names ("batch", "heads", "ff", ...) meet physical mesh axes ("pod",
+"data", "model"). Model and launch code only ever speak logical names.
+"""
+from repro.dist import sharding  # noqa: F401
+from repro.dist.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    Ruleset,
+    active,
+    axis_size,
+    constrain,
+    kv_repeat,
+    use_rules,
+)

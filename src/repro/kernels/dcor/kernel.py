@@ -21,6 +21,7 @@ F32 = jnp.float32
 
 def _dist_kernel(xi_ref, xj_ref, o_ref, acc_ref, *, n_d):
     kd = pl.program_id(2)
+    bi, bj = pl.program_id(0), pl.program_id(1)
 
     @pl.when(kd == 0)
     def _init():
@@ -36,8 +37,13 @@ def _dist_kernel(xi_ref, xj_ref, o_ref, acc_ref, *, n_d):
 
     @pl.when(kd == n_d - 1)
     def _finish():
-        o_ref[...] = jnp.sqrt(jnp.maximum(acc_ref[...], 0.0)).astype(
-            o_ref.dtype)
+        # pin self-distances to exact 0: the squared-norm expansion cancels
+        # catastrophically on the diagonal and sqrt amplifies the residue
+        bn = acc_ref.shape[0]
+        rows = bi * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 0)
+        cols = bj * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 1)
+        d2 = jnp.where(rows == cols, 0.0, jnp.maximum(acc_ref[...], 0.0))
+        o_ref[...] = jnp.sqrt(d2).astype(o_ref.dtype)
 
 
 def pairwise_dists(x, *, block_n: int = 128, block_d: int = 512,

@@ -1,12 +1,7 @@
-"""jnp oracle for the pairwise-distance kernel (dCor hot spot)."""
-import jax.numpy as jnp
+"""jnp oracle for the pairwise-distance kernel (dCor hot spot).
 
-F32 = jnp.float32
-
-
-def pairwise_dists_ref(x):
-    """x: (n, d) -> (n, n) Euclidean distances."""
-    x = x.astype(F32)
-    sq = jnp.sum(x * x, axis=-1)
-    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
-    return jnp.sqrt(jnp.maximum(d2, 0.0))
+One formula, one home: the oracle lives in repro.core.privacy (incl. the
+exact-zero self-distance diagonal pin); this module just re-exports it
+under the kernel-reference naming convention.
+"""
+from repro.core.privacy import pairwise_dists as pairwise_dists_ref  # noqa: F401

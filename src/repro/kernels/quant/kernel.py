@@ -18,7 +18,10 @@ F32 = jnp.float32
 def _quant_kernel(x_ref, q_ref, s_ref, *, qmax):
     x = x_ref[...].astype(F32)
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / qmax
+    # explicit reciprocal multiply: XLA rewrites `amax / const` that way in
+    # some fusion contexts but not others; writing it out keeps the kernel
+    # and the jnp oracle bit-identical (a 1-ULP scale skew flips round())
+    scale = jnp.maximum(amax, 1e-8) * jnp.float32(1.0 / qmax)
     q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
     q_ref[...] = q.astype(jnp.int8)
     s_ref[...] = scale

@@ -1,16 +1,20 @@
-"""jnp oracle for the int8 quantisation kernel."""
+"""jnp oracle for the int8 quantisation kernel.
+
+One formula, one home: the rowwise symmetric quantiser lives in
+repro.core.boundary (incl. the reciprocal-multiply scale that keeps it
+bit-identical with the Pallas kernel); this module re-exports it under
+the kernel-reference naming convention.
+"""
 import jax.numpy as jnp
 
-F32 = jnp.float32
+from repro.core.boundary import dequantize as _dequantize
+from repro.core.boundary import rowwise_quant
 
 
 def quantize_ref(x, qmax: int = 127):
     """Rowwise symmetric int8: x (..., d) -> (q int8, scale (..., 1) f32)."""
-    amax = jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / qmax
-    q = jnp.clip(jnp.round(x.astype(F32) / scale), -qmax - 1, qmax)
-    return q.astype(jnp.int8), scale
+    return rowwise_quant(x, qmax)
 
 
 def dequantize_ref(q, scale, dtype=jnp.bfloat16):
-    return (q.astype(F32) * scale).astype(dtype)
+    return _dequantize(q, scale, dtype)

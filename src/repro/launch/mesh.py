@@ -12,8 +12,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / examples)."""
-    n = len(jax.devices())
-    data = min(data, n)
+    """Small mesh over whatever devices exist (tests / examples).
+
+    Requested axis sizes are clamped to the host's device count and then
+    walked down to divisors, so the resulting (data, model) grid is always
+    constructible — e.g. asking for (16, 16) on a 1-device host yields
+    (1, 1) instead of a shape/device-count mismatch.
+    """
+    n = max(1, len(jax.devices()))
+    data = max(1, min(data, n))
+    while n % data:
+        data -= 1
     model = max(1, min(model, n // data))
+    while (n // data) % model:
+        model -= 1
     return jax.make_mesh((data, model), ("data", "model"))

@@ -27,11 +27,10 @@ from repro.core import boundary
 from repro.core.splitting import lm_head, lm_split_points, lm_tail
 from repro.dist import sharding as sh
 from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import COMPILER_OPTS, serve_overrides
+from repro.launch.steps import (compile_lowered, serve_overrides,
+                                serve_param_template)
 from repro.models import abstract_params
 from repro.models.template import shardings_from_template
-from repro.models import lm as lmmod
-from repro.launch.steps import serve_param_template
 
 
 def pod_submesh(mesh, pod: int) -> Mesh:
@@ -73,7 +72,7 @@ def main():
         head = jax.jit(lambda p, b: lm_head(cfg, p, b, k),
                        in_shardings=(psh, None))
         lowered = head.lower(pabs, batch_abs)
-        compiled = lowered.compile(COMPILER_OPTS)
+        compiled = compile_lowered(lowered)
         results["head_memory"] = str(compiled.memory_analysis())
         act_abs = jax.eval_shape(lambda p, b: lm_head(cfg, p, b, k),
                                  pabs, batch_abs)
@@ -82,7 +81,7 @@ def main():
         psh = shardings_from_template(tmpl, rs)
         tail = jax.jit(lambda p, a, b: lm_tail(cfg, p, a, b, k),
                        in_shardings=(psh, None, None))
-        compiled = tail.lower(pabs, act_abs, batch_abs).compile(COMPILER_OPTS)
+        compiled = compile_lowered(tail.lower(pabs, act_abs, batch_abs))
         results["tail_memory"] = str(compiled.memory_analysis())
     ici_bw = 50e9
     results["boundary_transfer_ms"] = round(

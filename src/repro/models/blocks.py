@@ -336,10 +336,8 @@ def attention_block(cfg, p, x, *, kind, window, positions, cross_kv=None,
 
 def _kv_quant(x):
     """Per-(token, head) symmetric int8 over head_dim. x: (..., dh)."""
-    amax = jnp.max(jnp.abs(cast(x, F32)), axis=-1, keepdims=True)
-    s = jnp.maximum(amax, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(cast(x, F32) / s), -128, 127).astype(jnp.int8)
-    return q, s
+    from repro.core.boundary import rowwise_quant  # lazy: avoid import cycle
+    return rowwise_quant(x, 127)
 
 
 def _kv_deq(q, s, dtype):

@@ -1,0 +1,170 @@
+"""repro.dist.sharding: ruleset resolution, override precedence, template
+shardings for serving, and the no-mesh fallback contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist import sharding as sh
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import serve_overrides, serve_param_template
+from repro.models import template as T
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs >= 8 (virtual) devices")
+
+
+def host_mesh():
+    mesh = make_host_mesh(2, 4)
+    assert dict(mesh.shape) == {"data": 2, "model": 4}
+    return mesh
+
+
+# ------------------------------------------------------------------ no mesh
+def test_no_mesh_fallback_is_identity():
+    assert sh.active() is None
+    x = jnp.ones((4, 8))
+    assert sh.constrain(x, ("batch", "embed")) is x
+    assert sh.axis_size("model") == 1
+    assert sh.axis_size("data") == 1
+    assert sh.kv_repeat(2, 8) == 1
+
+
+def test_single_device_mesh_constrain_is_identity():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    x = jnp.ones((4, 8))
+    with sh.use_rules(mesh):
+        assert sh.constrain(x, ("batch", "ff")) is x
+
+
+def test_use_rules_nests_and_restores():
+    mesh = make_host_mesh(1, 1)
+    with sh.use_rules(mesh) as outer:
+        assert sh.active() is outer
+        with sh.use_rules(mesh, {"ctx": "model"}) as inner:
+            assert sh.active() is inner
+            assert inner.rules["ctx"] == "model"
+        assert sh.active() is outer
+        assert outer.rules["ctx"] is None
+    assert sh.active() is None
+
+
+# ------------------------------------------------------------------ resolution
+@multi_device
+def test_spec_resolution_and_divisibility():
+    with sh.use_rules(host_mesh()) as rs:
+        # batch -> ("pod","data"); pod absent from a host mesh -> data only
+        assert rs.spec(("batch", "seq", "embed"), (8, 16, 32)) == P(
+            "data", None, None)
+        # indivisible dim falls back to replicated, not an XLA error
+        assert rs.spec(("heads", None), (6, 4)) == P(None, None)
+        assert rs.spec(("heads", None), (8, 4)) == P("model", None)
+        # first dim claiming a mesh axis wins; duplicates drop
+        assert rs.spec(("ff", "heads"), (8, 8)) == P("model", None)
+        # experts maps to an "expert" axis no current mesh carries
+        assert rs.spec(("experts", "fsdp", "ff"), (8, 8, 8)) == P(
+            None, "data", "model")
+        assert rs.axis_size("model") == 4
+        assert rs.axis_size("data") == 2
+        assert rs.axis_size("pod") == 1
+        assert rs.axis_size("batch") == 2
+
+
+@multi_device
+def test_override_precedence():
+    mesh = host_mesh()
+    with sh.use_rules(mesh, {"fsdp": None, "cache_seq": "model"}) as rs:
+        # fsdp replicated by override (serving weight replication)
+        assert rs.spec(("fsdp", "ff"), (8, 8)) == P(None, "model")
+        # cache_seq claims "model" first; kv then drops as a duplicate
+        assert rs.spec(("batch", "cache_seq", "kv", None),
+                       (8, 32, 4, 64)) == P("data", "model", None, None)
+    # defaults untouched after exit
+    with sh.use_rules(mesh) as rs:
+        assert rs.spec(("fsdp", "ff"), (8, 8)) == P("data", "model")
+
+
+def test_unknown_logical_axis_raises():
+    with sh.use_rules(make_host_mesh(1, 1)) as rs:
+        with pytest.raises(KeyError, match="unknown logical axis"):
+            rs.spec(("not_an_axis",), (8,))
+    with pytest.raises(TypeError):
+        sh.Ruleset(make_host_mesh(1, 1), dict(sh.DEFAULT_RULES)).\
+            with_overrides({"ff": 3})
+
+
+# ------------------------------------------------------------------ kv_repeat
+@multi_device
+def test_kv_repeat_accounts_for_model_sharding():
+    with sh.use_rules(host_mesh()):  # model = 4
+        assert sh.kv_repeat(4, 8) == 1   # kv already divisible by 4
+        assert sh.kv_repeat(2, 8) == 2   # repeat to lcm(2,4)=4 kv heads
+        assert sh.kv_repeat(1, 8) == 4   # MQA: one kv head per shard
+        assert sh.kv_repeat(3, 6) == 1   # heads (6) can't shard over 4
+        assert sh.kv_repeat(1, 2) == 1   # lcm(1,4)=4 > n_heads: stay GQA
+
+
+# ------------------------------------------------------------------ constrain
+@multi_device
+def test_constrain_applies_named_sharding_under_jit():
+    mesh = host_mesh()
+    x = jnp.zeros((8, 16, 32))
+    with sh.use_rules(mesh):
+        y = jax.jit(lambda t: sh.constrain(t, ("batch", "seq", "embed")))(x)
+    want = NamedSharding(mesh, P("data", None, None))
+    assert y.sharding.is_equivalent_to(want, x.ndim)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+@multi_device
+def test_constrain_all_replicated_is_identity_trace():
+    mesh = host_mesh()
+    x = jnp.zeros((3, 5))  # nothing divides: spec fully replicated
+    with sh.use_rules(mesh):
+        y = sh.constrain(x, ("heads", "ff"))
+    assert y is x
+
+
+# ------------------------------------------------------------------ serving
+@pytest.mark.parametrize("arch", ["granite-8b", "mixtral-8x22b"])
+@multi_device
+def test_serve_param_template_shardings(arch):
+    """Acceptance: use_rules(make_host_mesh(), serve_overrides(cfg)) yields
+    valid NamedShardings for the whole serve param template."""
+    cfg = get_config(arch)
+    mesh = host_mesh()
+    tmpl = serve_param_template(cfg)
+    with sh.use_rules(mesh, serve_overrides(cfg)) as rs:
+        shd = T.shardings_from_template(tmpl, rs)
+    leaves = jax.tree.leaves(shd)
+    assert leaves and all(isinstance(s, NamedSharding) for s in leaves)
+    # shard_shape() validates every spec against its actual leaf shape
+    shard_shapes = jax.tree.map(lambda spec, s: s.shard_shape(spec.shape),
+                                tmpl, shd, is_leaf=T.is_spec)
+    assert jax.tree.leaves(shard_shapes)
+
+
+@multi_device
+def test_specs_from_template_requires_ruleset():
+    cfg = get_config("granite-8b").reduced()
+    tmpl = serve_param_template(cfg)
+    with pytest.raises(AssertionError):
+        T.specs_from_template(tmpl)  # no active ruleset, none passed
+
+
+# ------------------------------------------------------------------ host mesh
+def test_make_host_mesh_clamps_to_device_count():
+    n = len(jax.devices())
+    mesh = make_host_mesh(16, 16)
+    assert mesh.devices.size <= n
+    mesh = make_host_mesh(0, 0)  # degenerate request -> (1, 1)
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+
+@multi_device
+def test_make_host_mesh_walks_down_to_divisors():
+    mesh = make_host_mesh(3, 5)  # 3 does not divide 8 -> data=2, model=4
+    assert dict(mesh.shape) == {"data": 2, "model": 4}

@@ -1,0 +1,28 @@
+"""Every module under src/repro must import.
+
+A missing package (like the repro.dist regression that once broke the
+whole suite at collection time) fails here with a precise module list,
+instead of as an opaque collection error in some downstream test.
+"""
+import importlib
+import pkgutil
+
+import repro
+
+
+def test_every_repro_module_imports():
+    failures = []
+
+    def record(name):
+        failures.append((name, "error during pkgutil walk"))
+
+    names = [m.name for m in pkgutil.walk_packages(repro.__path__,
+                                                   prefix="repro.",
+                                                   onerror=record)]
+    assert names, "walk_packages found nothing — PYTHONPATH broken?"
+    for name in names:
+        try:
+            importlib.import_module(name)
+        except Exception as e:  # noqa: BLE001 — report all, not just first
+            failures.append((name, repr(e)))
+    assert not failures, f"unimportable modules: {failures}"
