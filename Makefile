@@ -1,11 +1,12 @@
 # Tier-1 verification, wrapped so CI and humans run the same thing.
 #   make test   — the repo's tier-1 gate (full pytest suite)
 #   make smoke  — quickstart end-to-end (profile -> PSO -> controller -> split)
+#   make fleet  — fleet engine smoke (1024 UEs, equivalence + speedup)
 #   make ci     — what .github/workflows/ci.yml runs on push
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke ci
+.PHONY: test smoke fleet ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -13,4 +14,7 @@ test:
 smoke:
 	$(PY) examples/quickstart.py --smoke
 
-ci: test smoke
+fleet:
+	$(PY) benchmarks/fleet.py --fast
+
+ci: test smoke fleet

@@ -5,6 +5,11 @@ UE-to-BS 37.39%, BS-to-BS 56.67%; no-interference identical; adaptive costs
 some extra UE energy. The fixed policy is the no-interference optimum; the
 adaptive policy queries the PSO table with the (trained) estimator's
 throughput prediction each 0.1s report.
+
+Runs on the ``repro.sim`` fleet engine: all four scenarios advance as one
+vectorized 4-UE fleet (one controller row per scenario), with the whole
+fleet's throughput estimates coming from a single ``predict`` call per
+report period.
 """
 from __future__ import annotations
 
@@ -13,13 +18,14 @@ import time
 import numpy as np
 
 from benchmarks.common import FAST, record
+from repro.channel import iq as iqmod
 from repro.channel import scenarios as sc
 from repro.channel import throughput as tpm
-from repro.core.controller import AdaptiveSplitController, ControllerConfig
+from repro.core.controller import ControllerConfig
 from repro.core.energy import EDGE_A40X2, UE_VM_2CORE
-from repro.core.objective import Constraints, Weights, evaluate
+from repro.core.objective import Constraints, Weights
 from repro.core.pso import pso_vectorized
-from repro.estimator.train import predict
+from repro.sim import simulate_fleet
 
 SCEN_LABEL = {"none": "No Interference", "jamming": "Jamming (S1)",
               "cci": "UE-to-BS Int. (S2)", "tdd": "BS-to-BS Int. (S3)"}
@@ -30,59 +36,52 @@ PAPER_DELAY_GAIN = {"jamming": 64.45, "cci": 37.39, "tdd": 56.67}
 SCEN_INT = {"none": -60.0, "jamming": 8.2, "cci": 5.0, "tdd": 7.5}
 
 
-def _metrics_at(prof, l0, tp_mbps):
-    terms = evaluate(prof, UE_VM_2CORE, EDGE_A40X2,
-                     np.array([tp_mbps * 1e6]), Weights(1, 0, 0),
-                     Constraints())
-    return (float(terms.d_e2e[l0, 0]), float(prof.privacy[l0]),
-            float(terms.e_ue[l0]))
-
-
-def run(state: dict) -> None:
-    t0 = time.time()
-    prof = state["vgg_profile"]
+def fig6_table(prof):
+    """The fig6 operating configuration: PSO table, controller config, and
+    the fixed policy (the no-interference optimum). Shared with
+    benchmarks/fleet so its equivalence check always exercises the exact
+    configuration this figure runs."""
     w = Weights(1.0, 0.15, 0.1)
     cons = Constraints(rho_max=0.92, tau_max_s=6.0, e_max_j=40.0)
     table = pso_vectorized(prof, UE_VM_2CORE, EDGE_A40X2, w, cons, 130)
     fixed_split = table.query(float(tpm.max_throughput_mbps(
         np.array(SCEN_INT["none"]))))
+    cfg = ControllerConfig(ewma_alpha=0.6, hysteresis_steps=2,
+                           fallback_split=fixed_split)
+    return table, cfg, fixed_split
+
+
+def fig6_episode(rng: np.random.Generator, T: int, load: float,
+                 n_sc: int | None) -> sc.EpisodeBatch:
+    """The fig6 operating points as one 4-UE episode: each scenario's trace
+    is noise around its fixed interference level (the 'none' row pinned at
+    the floor). ``n_sc=None`` skips IQ synthesis (no estimator)."""
+    scen = np.array(list(SCEN_INT))
+    traces = np.array([np.clip(x + rng.normal(0, 1.0, T + sc.WINDOW), -60, 14)
+                       for x in SCEN_INT.values()])
+    traces[0, :] = -60.0
+    return sc.gen_episode_batch(
+        scen, T, rng, load_ratio=load, int_dbm=traces,
+        include_iq=n_sc is not None, n_sc=n_sc or iqmod.N_SC)
+
+
+def run(state: dict) -> None:
+    t0 = time.time()
+    prof = state["vgg_profile"]
+    table, cfg, fixed_split = fig6_table(prof)
     est = state.get("estimator")  # (cfg, params) from table2, or None
     rng = np.random.default_rng(123)
     T = 30 if FAST else 80
     load = 0.12  # low UL load: the regime where KPMs alone fail
+    episode = fig6_episode(rng, T, load, est[0].n_sc if est else None)
+    # warm start: the AF streams reports continuously before this window
+    res = simulate_fleet(episode, table, prof, cfg, warm_split=fixed_split,
+                         estimator=est, fixed_split=fixed_split)
+    adapt = res.scenario_means(episode.scenario_idx)
+    fixed = res.fixed.scenario_means(episode.scenario_idx)
     summary = {}
-    for scen, int_dbm in SCEN_INT.items():
-        trace = np.clip(int_dbm + rng.normal(0, 1.0, T + sc.WINDOW), -60, 14)
-        if scen == "none":
-            trace[:] = -60.0
-        # KPM reports along the ACTUAL trace (rolling estimator windows)
-        from repro.channel import iq as iqmod
-        from repro.channel.kpm import kpm_window, normalize_kpms
-        kpms_all = normalize_kpms(kpm_window(trace, load, rng, scen))
-        ctl = AdaptiveSplitController(table, ControllerConfig(
-            ewma_alpha=0.6, hysteresis_steps=2, fallback_split=fixed_split))
-        # warm start: the AF streams reports continuously before this window
-        ctl.current_split = fixed_split
-        fixed_acc, adap_acc = [], []
-        for t in range(sc.WINDOW, sc.WINDOW + T):
-            true_tp = float(tpm.max_throughput_mbps(np.array(trace[t])))
-            if est is not None:
-                ecfg, eparams = est
-                iq = iqmod.spectrogram(float(trace[t]), scen, load, rng,
-                                       n_sc=ecfg.n_sc)
-                data = {"kpms": kpms_all[None, t - sc.WINDOW:t],
-                        "iq": iq[None].astype(np.float32),
-                        "alloc": np.array([load], np.float32),
-                        "tp": np.array([0.0], np.float32)}
-                est_tp = float(np.clip(predict(ecfg, eparams, data)[0],
-                                       1.0, 130.0))
-            else:
-                est_tp = true_tp
-            l_adap = ctl.update(est_tp)
-            fixed_acc.append(_metrics_at(prof, fixed_split, true_tp))
-            adap_acc.append(_metrics_at(prof, l_adap, true_tp))
-        fx = np.mean(fixed_acc, axis=0)
-        ad = np.mean(adap_acc, axis=0)
+    for scen in SCEN_INT:
+        fx, ad = fixed[scen], adapt[scen]
         gain = 100.0 * (fx[0] - ad[0]) / max(fx[0], 1e-9)
         summary[scen] = (fx, ad, gain)
         record(f"fig6/{scen}", t0,

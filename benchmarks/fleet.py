@@ -1,0 +1,152 @@
+"""Fleet-size sweep on the ``repro.sim`` engine.
+
+Simulates fleets of N UEs (mixed S0-S3 interference, heterogeneous UL
+loads, mid-episode scenario handover for a quarter of the fleet) through
+the vectorized controller -> PSO -> metrics path, and reports
+
+  * per-fleet delay / energy / privacy aggregates per scenario group,
+  * wall-clock engine throughput in UE-steps/sec,
+  * the speedup over the legacy per-UE, per-step looped path, and
+  * an equivalence check: the single-UE fig6 configuration run through the
+    engine matches the sequential implementation to float tolerance.
+
+Run:  PYTHONPATH=src python benchmarks/fleet.py [--fast] [--sizes 1 64 1024]
+Also exposed as ``run(state)`` for benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/fleet.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import fig6_adaptive
+from benchmarks.common import FAST, record
+from repro.channel.scenarios import SCENARIOS, WINDOW, gen_episode_batch
+from repro.sim import simulate_fleet, simulate_fleet_looped
+
+LOOP_REF_UES = 32  # the looped path is timed on a slice this big (its
+# per-UE cost is constant, so the UE-steps/sec rate transfers to any N)
+
+
+def build_fleet_episode(n: int, T: int, rng: np.random.Generator,
+                        handover_frac: float = 0.25):
+    """Mixed-scenario fleet: scenarios cycle S0-S3 across UEs, loads are
+    heterogeneous, and ``handover_frac`` of the fleet hands over to the
+    next scenario mid-episode."""
+    base = np.asarray(SCENARIOS)[np.arange(n) % len(SCENARIOS)]
+    grid = np.repeat(base[:, None], T + WINDOW, axis=1)
+    n_h = int(round(n * handover_frac))
+    hover = rng.choice(n, n_h, replace=False) if n_h else np.array([], int)
+    nxt = np.asarray(SCENARIOS)[(np.arange(n) + 1) % len(SCENARIOS)]
+    grid[hover, WINDOW + T // 2:] = nxt[hover, None]
+    loads = rng.uniform(0.05, 1.0, n)
+    ep = gen_episode_batch(grid, T, rng, load_ratio=loads, include_iq=False)
+    return ep, hover
+
+
+def check_fig6_equivalence(prof, table, cfg, fixed, t0) -> bool:
+    """The fig6 configuration (one UE per scenario at its operating point)
+    through the engine vs the sequential per-UE loop: split decisions must
+    be identical and per-scenario metric means equal to float tolerance."""
+    rng = np.random.default_rng(123)
+    ep = fig6_adaptive.fig6_episode(rng, 30, 0.12, None)
+    vec = simulate_fleet(ep, table, prof, cfg, warm_split=fixed,
+                         fixed_split=fixed)
+    loop = simulate_fleet_looped(ep, table, prof, cfg, warm_split=fixed,
+                                 fixed_split=fixed)
+    splits_eq = np.array_equal(vec.splits, loop.splits)
+    mv, ml = (r.scenario_means(ep.scenario_idx) for r in (vec, loop))
+    mean_err = max(float(np.max(np.abs(mv[s] - ml[s]) / np.abs(ml[s])))
+                   for s in mv)
+    ok = splits_eq and mean_err < 1e-9
+    record("fleet/fig6_equivalence", t0,
+           f"splits_identical={splits_eq};scenario_mean_max_relerr="
+           f"{mean_err:.2e};ok={ok}")
+    return ok
+
+
+def fleet_cell(n: int, T: int, prof, table, cfg, fixed, rng, t0,
+               speedup_at: int | None = None) -> dict:
+    ep, hover = build_fleet_episode(n, T, rng)
+    simulate_fleet(ep, table, prof, cfg, fixed_split=fixed)  # warm the jit
+    t1 = time.perf_counter()
+    res = simulate_fleet(ep, table, prof, cfg, fixed_split=fixed)
+    dt = time.perf_counter() - t1
+    rate = n * T / dt
+    means = res.scenario_means(ep.scenario_idx)
+    hmask = np.zeros(n, bool)
+    hmask[hover] = True
+    agg = ";".join(
+        f"{s}_delay_ms={m[0]*1e3:.0f};{s}_energy_J={m[2]:.2f};"
+        f"{s}_privacy={m[1]:.3f}" for s, m in sorted(means.items()))
+    ho = (f";handover_delay_ms={res.delay_s[hmask].mean()*1e3:.0f}"
+          if hmask.any() else "")
+    out = {"n": n, "rate": rate, "means": means}
+    derived = f"ue_steps_per_sec={rate:.0f};{agg}{ho}"
+    if speedup_at is not None and n >= speedup_at:
+        m = min(n, LOOP_REF_UES)
+        sub, _ = build_fleet_episode(m, T, rng)
+        simulate_fleet_looped(sub, table, prof, cfg, fixed_split=fixed)
+        t2 = time.perf_counter()
+        simulate_fleet_looped(sub, table, prof, cfg, fixed_split=fixed)
+        loop_rate = m * T / (time.perf_counter() - t2)
+        out["speedup"] = rate / loop_rate
+        derived += (f";looped_ue_steps_per_sec={loop_rate:.0f};"
+                    f"speedup_x={rate / loop_rate:.0f};"
+                    f"speedup>=50x={rate / loop_rate >= 50.0}")
+    record(f"fleet/n{n}", t0, derived)
+    return out
+
+
+def run(state: dict, sizes=None, T: int | None = None) -> bool:
+    t0 = time.time()
+    prof = state.get("vgg_profile")
+    if prof is None:
+        from repro.models.vgg import FULL, vgg_split_profile
+        prof = state["vgg_profile"] = vgg_split_profile(FULL)
+    # the fig6 configuration, shared so the equivalence check below always
+    # exercises exactly what benchmarks/fig6_adaptive.py runs
+    table, cfg, fixed = fig6_adaptive.fig6_table(prof)
+    sizes = sizes or ([1, 64, 1024] if FAST else [1, 64, 1024, 4096])
+    T = T or (30 if FAST else 100)
+    ok_eq = check_fig6_equivalence(prof, table, cfg, fixed, t0)
+    rng = np.random.default_rng(7)
+    cells = [fleet_cell(n, T, prof, table, cfg, fixed, rng, t0,
+                        speedup_at=max(sizes)) for n in sizes]
+    state["fleet"] = cells
+    speedups = [c["speedup"] for c in cells if "speedup" in c]
+    ok_speed = bool(speedups) and max(speedups) >= 50.0
+    record("fleet/claims", t0,
+           f"fig6_equivalence={ok_eq};max_fleet={max(sizes)};"
+           f"speedup>=50x={ok_speed}")
+    return ok_eq and ok_speed
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="fleet-size sweep")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: short episodes, sizes 1/64/1024")
+    ap.add_argument("--sizes", type=int, nargs="+", default=None)
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+    if args.fast:
+        import benchmarks.common as common
+        common.FAST = True
+        global FAST
+        FAST = True
+    sizes = args.sizes or ([1, 64, 1024] if (FAST or args.fast)
+                           else [1, 64, 1024, 4096])
+    T = args.steps or (30 if (FAST or args.fast) else 100)
+    ok = run({}, sizes=sizes, T=T)
+    print(f"# fleet sweep {'OK' if ok else 'FAILED'}", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,8 +6,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig2_zones, fig5_objective, fig6_adaptive, roofline,
-                        table2_estimator)
+from benchmarks import (fig2_zones, fig5_objective, fig6_adaptive, fleet,
+                        roofline, table2_estimator)
 from benchmarks.common import emit_header, record
 
 
@@ -16,7 +16,7 @@ def main() -> None:
     state: dict = {}
     failures = []
     for mod in (fig2_zones, fig5_objective, table2_estimator, fig6_adaptive,
-                roofline):
+                fleet, roofline):
         t0 = time.time()
         try:
             mod.run(state)

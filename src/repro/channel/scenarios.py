@@ -4,10 +4,16 @@ S0 none | S1 jamming (signal generator) | S2 UE-to-BS CCI | S3 BS-to-BS TDD
 pattern mismatch. Each episode draws an interference-power trajectory,
 produces 0.1s KPM reports, per-window IQ spectrograms, and the ground-truth
 max achievable throughput label.
+
+The production path is batched: ``gen_episode_batch`` emits (N, T, ...)
+arrays for N UEs in one shot (the substrate ``repro.sim`` fleets run on);
+``gen_episode``/``gen_dataset`` are thin shims over it that keep the
+original per-sample API.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -29,59 +35,138 @@ class Sample:
     int_dbm: float
 
 
+def interference_trace_batch(scenarios, T: int,
+                             rng: np.random.Generator) -> np.ndarray:
+    """(N, T) interference power (dBm): one trace per requested scenario."""
+    scen = np.asarray(scenarios)
+    N = len(scen)
+    base = rng.uniform(-30, 10, N)
+    walk = np.cumsum(rng.normal(0, 1.0, (N, T)), axis=1)
+    tr = base[:, None] + walk - walk.mean(axis=1, keepdims=True)
+    # bursty on/off jammer
+    on = np.sin(np.arange(T)[None] / rng.uniform(3, 10, N)[:, None]) > -0.3
+    tr = np.where((scen == "jamming")[:, None] & ~on, -60.0, tr)
+    return np.where((scen == "none")[:, None], -60.0, np.clip(tr, -60, 14))
+
+
 def interference_trace(scenario: str, T: int,
                        rng: np.random.Generator) -> np.ndarray:
-    """Interference power (dBm) over T reporting periods."""
-    if scenario == "none":
-        return np.full(T, -60.0)
-    base = rng.uniform(-30, 10)
-    walk = np.cumsum(rng.normal(0, 1.0, T))
-    tr = base + walk - walk.mean()
-    if scenario == "jamming":  # bursty on/off jammer
-        on = (np.sin(np.arange(T) / rng.uniform(3, 10)) > -0.3)
-        tr = np.where(on, tr, -60.0)
-    return np.clip(tr, -60, 14)
+    """(T,) trace for one scenario (shim over the batched path)."""
+    return interference_trace_batch([scenario], T, rng)[0]
+
+
+@dataclasses.dataclass
+class EpisodeBatch:
+    """N parallel episodes as stacked arrays (the fleet engine's input).
+
+    ``int_dbm``/``kpms`` cover the full ``T + WINDOW`` trace (the warm-up
+    prefix fills the first estimator window); labels and spectrograms exist
+    for the T reporting steps. ``scenario_idx`` indexes ``SCENARIOS``.
+    """
+
+    scenario_idx: np.ndarray  # (N,) int
+    alloc_ratio: np.ndarray  # (N,)
+    int_dbm: np.ndarray  # (N, T + WINDOW)
+    kpms: np.ndarray  # (N, T + WINDOW, 15) raw (unnormalized) reports
+    tp_mbps: np.ndarray  # (N, T) ground-truth labels
+    iq: np.ndarray | None  # (N, T, 2, n_sc, 14) or None if not requested
+
+    @property
+    def n_ues(self) -> int:
+        return self.int_dbm.shape[0]
+
+    @property
+    def n_steps(self) -> int:
+        return self.tp_mbps.shape[1]
+
+    def kpm_windows(self, normalize: bool = True) -> np.ndarray:
+        """(N, T, WINDOW, 15) rolling estimator windows: step t sees the
+        WINDOW reports strictly before trace position ``WINDOW + t``."""
+        k = kpmmod.normalize_kpms(self.kpms) if normalize else self.kpms
+        win = np.lib.stride_tricks.sliding_window_view(k, WINDOW, axis=1)
+        return win.transpose(0, 1, 3, 2)[:, :self.n_steps]
+
+
+def gen_episode_batch(scenarios, T: int, rng: np.random.Generator,
+                      load_ratio=None, n_sc: int = iqmod.N_SC,
+                      include_iq: bool = True,
+                      int_dbm: np.ndarray | None = None) -> EpisodeBatch:
+    """Generate N episodes in one vectorized pass.
+
+    ``scenarios``: (N,) scenario names, or an (N, T + WINDOW) name grid for
+    mid-episode scenario handover. ``load_ratio``: None (drawn per UE),
+    scalar, or (N,). ``int_dbm`` overrides the drawn interference traces
+    (shape (N, T + WINDOW) — e.g. fixed operating points around a mean).
+    """
+    scen = np.asarray(scenarios)
+    scen_grid = scen if scen.ndim == 2 else None
+    scen0 = scen[:, 0] if scen.ndim == 2 else scen  # for trace + labels
+    N = len(scen0)
+    lr = (rng.uniform(0.05, 1.0, N) if load_ratio is None
+          else np.broadcast_to(np.asarray(load_ratio, float), (N,)).copy())
+    if int_dbm is None:
+        if scen_grid is None:
+            tr = interference_trace_batch(scen0, T + WINDOW, rng)
+        else:  # handover: every cell reads its row's trace for its scenario
+            tr = np.empty((N, T + WINDOW))
+            for s in np.unique(scen_grid):
+                mask = scen_grid == s
+                seg = interference_trace_batch(np.full(N, s), T + WINDOW, rng)
+                tr[mask] = seg[mask]
+    else:
+        tr = np.asarray(int_dbm, float)
+        assert tr.shape == (N, T + WINDOW), tr.shape
+    kpms = kpmmod.kpm_window_batch(tr, lr, rng,
+                                   scen_grid if scen_grid is not None
+                                   else scen0)
+    tp = tpmod.max_throughput_mbps(tr[:, WINDOW:])
+    iq = None
+    if include_iq:
+        rep = (scen_grid[:, WINDOW:] if scen_grid is not None
+               else np.repeat(scen0, T).reshape(N, T))
+        iq = iqmod.spectrogram_batch(
+            tr[:, WINDOW:].ravel(), rep.ravel(), np.repeat(lr, T), rng,
+            n_sc=n_sc).reshape(N, T, 2, n_sc, iqmod.N_SYM)
+    sidx = np.array([SCENARIOS.index(s) if s in SCENARIOS else -1
+                     for s in scen0])
+    return EpisodeBatch(scenario_idx=sidx, alloc_ratio=lr, int_dbm=tr,
+                        kpms=kpms, tp_mbps=tp, iq=iq)
 
 
 def gen_episode(scenario: str, T: int, rng: np.random.Generator,
                 load_ratio: float | None = None, n_sc: int = iqmod.N_SC
                 ) -> list[Sample]:
-    lr = rng.uniform(0.05, 1.0) if load_ratio is None else load_ratio
-    tr = interference_trace(scenario, T + WINDOW, rng)
-    kpms = kpmmod.kpm_window(tr, lr, rng, scenario)
-    out = []
-    for t in range(WINDOW, T + WINDOW):
-        x = float(tr[t])
-        out.append(Sample(
-            kpms=kpms[t - WINDOW:t],
-            iq=iqmod.spectrogram(x, scenario, lr, rng, n_sc=n_sc),
-            alloc_ratio=lr,
-            tp_mbps=float(tpmod.max_throughput_mbps(np.array(x))),
-            scenario=scenario,
-            int_dbm=x,
-        ))
-    return out
+    """Original per-sample episode API (shim over the batched path)."""
+    ep = gen_episode_batch([scenario], T, rng, load_ratio=load_ratio,
+                           n_sc=n_sc)
+    windows = ep.kpm_windows(normalize=False)[0]  # (T, WINDOW, 15)
+    return [Sample(kpms=windows[t], iq=ep.iq[0, t],
+                   alloc_ratio=float(ep.alloc_ratio[0]),
+                   tp_mbps=float(ep.tp_mbps[0, t]), scenario=scenario,
+                   int_dbm=float(ep.int_dbm[0, WINDOW + t]))
+            for t in range(T)]
 
 
 def gen_dataset(n_per_scenario: int, rng: np.random.Generator,
                 scenarios=SCENARIOS, episode_len: int = 20,
                 low_load_only: bool = False, n_sc: int = iqmod.N_SC):
-    """Arrays ready for the estimator: dict of stacked fields."""
-    samples: list[Sample] = []
-    while min(sum(s.scenario == sc for s in samples) for sc in scenarios
-              ) < n_per_scenario if samples else True:
-        for sc in scenarios:
-            lr = rng.uniform(0.05, 0.2) if low_load_only else None
-            samples.extend(gen_episode(sc, episode_len, rng, load_ratio=lr,
-                                       n_sc=n_sc))
-        if all(sum(s.scenario == sc for s in samples) >= n_per_scenario
-               for sc in scenarios):
-            break
-    rng.shuffle(samples)
-    kpms = np.stack([kpmmod.normalize_kpms(s.kpms) for s in samples])
-    iqs = np.stack([s.iq for s in samples])
-    alloc = np.array([s.alloc_ratio for s in samples], np.float32)
-    y = np.array([s.tp_mbps for s in samples], np.float32)
-    meta = np.array([SCENARIOS.index(s.scenario) for s in samples])
-    return {"kpms": kpms.astype(np.float32), "iq": iqs.astype(np.float32),
-            "alloc": alloc, "tp": y, "scenario": meta}
+    """Arrays ready for the estimator: dict of stacked fields.
+
+    One batched pass: enough whole episodes per scenario to reach
+    ``n_per_scenario`` samples each (episodes are never truncated, so
+    scenarios may exceed the target — same contract as the old loop).
+    """
+    n_eps = math.ceil(n_per_scenario / episode_len)
+    scen = np.repeat(np.asarray(scenarios), n_eps)
+    lr = rng.uniform(0.05, 0.2, len(scen)) if low_load_only else None
+    ep = gen_episode_batch(scen, episode_len, rng, load_ratio=lr, n_sc=n_sc)
+    n = ep.n_ues * ep.n_steps
+    perm = rng.permutation(n)
+    kpms = ep.kpm_windows(normalize=True).reshape(n, WINDOW, -1)[perm]
+    return {"kpms": kpms.astype(np.float32),
+            "iq": ep.iq.reshape((n,) + ep.iq.shape[2:])[perm]
+            .astype(np.float32),
+            "alloc": np.repeat(ep.alloc_ratio, ep.n_steps)[perm]
+            .astype(np.float32),
+            "tp": ep.tp_mbps.reshape(n)[perm].astype(np.float32),
+            "scenario": np.repeat(ep.scenario_idx, ep.n_steps)[perm]}

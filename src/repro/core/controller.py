@@ -3,13 +3,31 @@
 Consumes throughput estimates from the RAN estimator every 0.1 s, smooths
 them (EWMA), queries the PSO lookup table, and re-splits with hysteresis so
 transient estimate noise does not thrash the deployment.
+
+The decision logic lives in a pure functional state machine —
+``ControllerState`` (a pytree of scalars) advanced by ``controller_step`` —
+so a whole fleet of controllers runs as one ``vmap`` over UEs inside one
+``lax.scan`` over report periods (see ``repro.sim``). The stateful
+``AdaptiveSplitController`` class is a thin wrapper over the same functional
+core, so the sequential and batched paths cannot drift apart.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
 
 from repro.core.pso import NO_SPLIT, LookupTable
+
+# ``pending_split`` sentinel. NO_SPLIT (-1) is a legal proposal (when the
+# fallback is NO_SPLIT itself), so "nothing pending" needs its own value.
+PENDING_NONE = -2
+
+F32 = jnp.float32
+I32 = jnp.int32
 
 
 @dataclasses.dataclass
@@ -19,45 +37,133 @@ class ControllerConfig:
     fallback_split: int = NO_SPLIT  # used when no feasible split exists
 
 
+class ControllerState(NamedTuple):
+    """One controller's full decision state. Every field is a scalar array;
+    batching a fleet is adding a leading (N,) axis to each leaf — the pytree
+    is what ``vmap``/``scan`` carry."""
+
+    tp_ewma: jax.Array  # f32, EWMA of the throughput estimates (Mbps)
+    has_ewma: jax.Array  # bool, False until the first report lands
+    current_split: jax.Array  # i32, deployed split (NO_SPLIT allowed)
+    pending_split: jax.Array  # i32, proposal under hysteresis; PENDING_NONE
+    pending_count: jax.Array  # i32, consecutive agreeing reports
+    step: jax.Array  # i32, reports consumed so far
+
+
+def controller_init(warm_split=NO_SPLIT, batch_shape=()) -> ControllerState:
+    """Fresh state, optionally warm-started at a deployed split.
+
+    ``warm_split`` may be a scalar or an (N,)-shaped array; ``batch_shape``
+    broadcasts every field for fleet use."""
+    warm = jnp.broadcast_to(jnp.asarray(warm_split, I32), batch_shape)
+    z = jnp.zeros(batch_shape, I32)
+    return ControllerState(
+        tp_ewma=jnp.zeros(batch_shape, F32),
+        has_ewma=jnp.zeros(batch_shape, bool),
+        current_split=warm,
+        pending_split=jnp.full(batch_shape, PENDING_NONE, I32),
+        pending_count=z,
+        step=z,
+    )
+
+
+def controller_step(table: jax.Array, state: ControllerState, tp_mbps,
+                    *, cfg: ControllerConfig
+                    ) -> tuple[ControllerState, jax.Array]:
+    """Advance one controller by one estimator report: (state, tp) ->
+    (state, split). Pure, scalar semantics; batch with
+    ``jax.vmap(partial(controller_step, cfg=cfg))(tables, states, tps)``
+    where ``tables`` is a stacked (U, tp_max+1) array (per-UE rows map
+    alongside per-UE states)."""
+    tp = jnp.asarray(tp_mbps, F32)  # both paths smooth in f32
+    a = cfg.ewma_alpha
+    ewma = jnp.where(state.has_ewma,
+                     a * tp + (1 - a) * state.tp_ewma, tp).astype(F32)
+    # LookupTable.query semantics: round to the integer Mbps bucket, clamp
+    # into the table; bucket 0 is never filled by the sweep => NO_SPLIT.
+    bucket = jnp.clip(jnp.round(ewma).astype(I32), 0, table.shape[-1] - 1)
+    proposal = jnp.take(table, bucket, axis=-1).astype(I32)
+    proposal = jnp.where(proposal == NO_SPLIT,
+                         jnp.asarray(cfg.fallback_split, I32), proposal)
+    differs = proposal != state.current_split
+    count = jnp.where(proposal == state.pending_split,
+                      state.pending_count + 1, 1)
+    switch = differs & (count >= cfg.hysteresis_steps)
+    # a switch or a revert-to-current clears the pending proposal entirely;
+    # a stale pending_split must never survive (see the class docstring test)
+    keep_pending = differs & ~switch
+    new = ControllerState(
+        tp_ewma=ewma,
+        has_ewma=jnp.ones_like(state.has_ewma),
+        current_split=jnp.where(switch, proposal, state.current_split),
+        pending_split=jnp.where(keep_pending, proposal,
+                                jnp.asarray(PENDING_NONE, I32)),
+        pending_count=jnp.where(keep_pending, count, 0),
+        step=state.step + 1,
+    )
+    return new, new.current_split
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_step(ewma_alpha: float, hysteresis_steps: int,
+                 fallback_split: int):
+    """One compiled step per distinct config — shared by every controller
+    instance (a looped fleet must not recompile per UE)."""
+    cfg = ControllerConfig(ewma_alpha, hysteresis_steps, fallback_split)
+    return jax.jit(functools.partial(controller_step, cfg=cfg))
+
+
 class AdaptiveSplitController:
+    """Stateful convenience wrapper over ``controller_step`` (one UE)."""
+
     def __init__(self, table: LookupTable,
                  cfg: Optional[ControllerConfig] = None):
         self.table = table
         self.cfg = cfg or ControllerConfig()
-        self.tp_ewma: Optional[float] = None
-        self.current_split: int = NO_SPLIT
-        self.pending_split: Optional[int] = None  # None = nothing pending
-        self.pending_count = 0
+        self._table_arr = jnp.asarray(table.table, I32)
+        self._step = _jitted_step(self.cfg.ewma_alpha,
+                                  self.cfg.hysteresis_steps,
+                                  self.cfg.fallback_split)
         self.switches: list[tuple[int, float, int]] = []  # (step, tp, l)
-        self._step = 0
+        self.state = controller_init()
 
-    def _clear_pending(self) -> None:
-        self.pending_split = None
-        self.pending_count = 0
+    # ---- attribute views kept for callers of the original class ----
+    @property
+    def tp_ewma(self) -> Optional[float]:
+        return float(self.state.tp_ewma) if bool(self.state.has_ewma) else None
+
+    @property
+    def current_split(self) -> int:
+        return int(self.state.current_split)
+
+    @current_split.setter
+    def current_split(self, l: int) -> None:
+        # legacy warm-start poke; prefer reset(warm_split=...)
+        self.state = self.state._replace(current_split=jnp.asarray(l, I32))
+
+    @property
+    def pending_split(self) -> Optional[int]:
+        p = int(self.state.pending_split)
+        return None if p == PENDING_NONE else p
+
+    @property
+    def pending_count(self) -> int:
+        return int(self.state.pending_count)
+
+    def reset(self, warm_split: int = NO_SPLIT) -> None:
+        """Return to a fresh state, deployed at ``warm_split`` (the AF warm
+        start: reports streamed before this window already settled the
+        split). Clears the EWMA, hysteresis and switch history."""
+        self.state = controller_init(warm_split)
+        self.switches = []
 
     def update(self, tp_estimate_mbps: float) -> int:
         """Feed one estimator report; returns the split to use now."""
-        a = self.cfg.ewma_alpha
-        self.tp_ewma = (tp_estimate_mbps if self.tp_ewma is None
-                        else a * tp_estimate_mbps + (1 - a) * self.tp_ewma)
-        proposal = self.table.query(self.tp_ewma)
-        if proposal == NO_SPLIT:
-            proposal = self.cfg.fallback_split
-        if proposal != self.current_split:
-            if proposal == self.pending_split:
-                self.pending_count += 1
-            else:
-                self.pending_split = proposal
-                self.pending_count = 1
-            if self.pending_count >= self.cfg.hysteresis_steps:
-                self.current_split = proposal
-                self.switches.append((self._step, self.tp_ewma, proposal))
-                self._clear_pending()
-        else:
-            # proposal reverted to the deployed split: drop the pending
-            # proposal entirely, not just its count — a stale pending_split
-            # would let a later lone agreeing report look like progress
-            # toward a switch that was already abandoned.
-            self._clear_pending()
-        self._step += 1
-        return self.current_split
+        prev = int(self.state.current_split)
+        step = int(self.state.step)
+        self.state, split = self._step(self._table_arr, self.state,
+                                       float(tp_estimate_mbps))
+        l = int(split)
+        if l != prev:
+            self.switches.append((step, float(self.state.tp_ewma), l))
+        return l

@@ -41,6 +41,59 @@ class LookupTable:
         return int(self.table[tp])
 
 
+@dataclasses.dataclass
+class StackedLookupTable:
+    """Many UE lookup tables stacked for fleet-scale vectorized queries.
+
+    ``tables[u, tp]`` is UE ``u``'s optimal split at (rounded-int) ``tp``
+    Mbps — the same layout as ``LookupTable.table`` with a leading UE axis,
+    so it drops straight into ``jax.vmap``-ed ``controller_step`` rows.
+    All stacked tables must share ``tp_max`` (and, for the per-split
+    metadata, the same number of split points L).
+    """
+
+    ue_names: list[str]
+    tables: np.ndarray  # (U, tp_max+1) int32
+    tp_min_mbps: np.ndarray  # (U, L)
+    feasible_prefilter: np.ndarray  # (U, L) bool
+
+    @classmethod
+    def stack(cls, tables: list[LookupTable]) -> "StackedLookupTable":
+        assert tables, "need at least one table"
+        widths = {len(t.table) for t in tables}
+        assert len(widths) == 1, f"mixed tp_max across tables: {widths}"
+        return cls(ue_names=[t.ue_name for t in tables],
+                   tables=np.stack([t.table for t in tables]),
+                   tp_min_mbps=np.stack([t.tp_min_mbps for t in tables]),
+                   feasible_prefilter=np.stack(
+                       [t.feasible_prefilter for t in tables]))
+
+    @property
+    def n_ues(self) -> int:
+        return self.tables.shape[0]
+
+    def row(self, u: int) -> LookupTable:
+        return LookupTable(self.ue_names[u], self.tables[u],
+                           self.tp_min_mbps[u], self.feasible_prefilter[u])
+
+    def query_many(self, tp_mbps: np.ndarray,
+                   ue_idx: np.ndarray | None = None) -> np.ndarray:
+        """Vectorized ``LookupTable.query``: one gather for the whole fleet.
+
+        ``tp_mbps``: (...,) throughput estimates; ``ue_idx``: matching table
+        row per estimate (default ``arange`` — one estimate per stacked UE).
+        Keeps the 0-bucket semantics: near-zero throughput rounds to bucket
+        0, which the sweep never fills, and therefore reads NO_SPLIT."""
+        tp = np.asarray(tp_mbps, float)
+        if ue_idx is None:
+            assert tp.shape == (self.n_ues,), (
+                f"default ue_idx needs one estimate per UE, got {tp.shape}")
+            ue_idx = np.arange(self.n_ues)
+        buckets = np.clip(np.round(tp), 0,
+                          self.tables.shape[1] - 1).astype(np.int64)
+        return self.tables[np.asarray(ue_idx), buckets]
+
+
 def _tp_min(profile: SplitProfile, ue: DeviceProfile, server: DeviceProfile,
             cons: Constraints) -> np.ndarray:
     """Line 5-6: minimal throughput (bps) that meets the latency budget."""

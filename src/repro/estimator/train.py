@@ -68,9 +68,15 @@ def _fwd(e, params, kpms, iq, alloc):
 
 
 def predict(e: EstimatorConfig, params, data: dict,
-            batch: int = 64) -> np.ndarray:
+            batch: int | None = 64) -> np.ndarray:
+    """Predicted throughput (Mbps) for every row of ``data``.
+
+    ``batch=None`` runs the whole input through one forward pass — the
+    fleet engine's per-report-period path (one ``predict`` per 0.1 s tick
+    for all N UEs); an int chunks the input to bound peak memory."""
     outs = []
     n = len(data["tp"])
+    batch = max(n, 1) if batch is None else batch
     for i in range(0, n, batch):
         outs.append(np.asarray(_fwd(
             e, params, jnp.asarray(data["kpms"][i:i + batch]),

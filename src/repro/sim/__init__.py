@@ -1,0 +1,8 @@
+"""repro.sim — fleet-scale adaptive-splitting simulation engine."""
+from repro.sim.engine import (FleetResult, TP_CLIP_MBPS, estimate_fleet,
+                              run_controllers, simulate_fleet,
+                              simulate_fleet_looped, split_metrics)
+
+__all__ = ["FleetResult", "TP_CLIP_MBPS", "estimate_fleet",
+           "run_controllers", "simulate_fleet", "simulate_fleet_looped",
+           "split_metrics"]

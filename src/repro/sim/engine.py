@@ -1,0 +1,216 @@
+"""Fleet-scale adaptive-splitting simulation engine.
+
+Runs N UEs x S scenarios through the paper's full adaptive path —
+channel -> KPM/IQ -> throughput estimate -> EWMA/hysteresis controller ->
+PSO lookup -> split metrics — as one vectorized program:
+
+  * episodes come in as an ``EpisodeBatch`` ((N, T, ...) arrays, see
+    ``repro.channel.scenarios.gen_episode_batch``),
+  * the whole fleet's throughput predictions come from a single estimator
+    ``predict`` call per 0.1 s report period,
+  * the N controllers advance as ``vmap(controller_step)`` inside one
+    ``lax.scan`` over report periods,
+  * delay/privacy/energy are gathered for the fleet in one indexing pass.
+
+``simulate_fleet_looped`` is the legacy per-UE, per-step Python loop kept
+as the equivalence reference and speedup baseline; both paths produce
+bit-identical split decisions (they share ``controller_step``) and
+float-identical metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.channel.scenarios import SCENARIOS, EpisodeBatch
+from repro.core.controller import (AdaptiveSplitController, ControllerConfig,
+                                   controller_init, controller_step)
+from repro.core.energy import EDGE_A40X2, UE_VM_2CORE, DeviceProfile
+from repro.core.objective import Constraints, Weights, evaluate
+from repro.core.profiles import SplitProfile
+from repro.core.pso import LookupTable, StackedLookupTable
+from repro.estimator.train import predict
+
+TP_CLIP_MBPS = (1.0, 130.0)  # estimator outputs clamped to the PSO sweep
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Per-UE, per-report-period outcome of a fleet simulation."""
+
+    splits: np.ndarray  # (N, T) int32 — deployed split per period
+    true_tp: np.ndarray  # (N, T) Mbps ground truth
+    est_tp: np.ndarray  # (N, T) Mbps fed to the controllers
+    delay_s: np.ndarray  # (N, T) E2E delay at the deployed split
+    privacy: np.ndarray  # (N, T) dCor leak at the deployed split
+    energy_j: np.ndarray  # (N, T) UE energy at the deployed split
+    fixed: Optional["FleetResult"] = None  # fixed-split baseline, same shapes
+
+    @property
+    def n_ues(self) -> int:
+        return self.splits.shape[0]
+
+    @property
+    def n_steps(self) -> int:
+        return self.splits.shape[1]
+
+    def scenario_means(self, scenario_idx: np.ndarray) -> dict:
+        """Per-scenario (delay, privacy, energy) means, keyed by name."""
+        out = {}
+        for i in np.unique(np.asarray(scenario_idx)):
+            rows = scenario_idx == i
+            name = SCENARIOS[i] if 0 <= i < len(SCENARIOS) else str(i)
+            out[name] = np.array([self.delay_s[rows].mean(),
+                                  self.privacy[rows].mean(),
+                                  self.energy_j[rows].mean()])
+        return out
+
+
+def split_metrics(profile: SplitProfile, splits: np.ndarray,
+                  tp_mbps: np.ndarray, ue: DeviceProfile = UE_VM_2CORE,
+                  server: DeviceProfile = EDGE_A40X2
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(delay_s, privacy, energy_j) for a whole fleet in one gather.
+
+    Element-for-element identical to ``evaluate(...)`` at the chosen split
+    (same operations in the same order, float64 throughout)."""
+    l = np.asarray(splits)
+    tp_bps = np.asarray(tp_mbps, float) * 1e6
+    delay = (profile.d_ue(ue)[l] + profile.d_ser(server)[l]
+             + profile.data_bytes[l] * 8.0 / tp_bps)
+    return delay, profile.privacy[l], profile.e_ue(ue)[l]
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_fn(ewma_alpha: float, hysteresis_steps: int, fallback_split: int):
+    """Compiled fleet sweep, cached per controller config (jit's own cache
+    then handles distinct fleet shapes)."""
+    cfg = ControllerConfig(ewma_alpha, hysteresis_steps, fallback_split)
+    step = functools.partial(controller_step, cfg=cfg)
+
+    @jax.jit
+    def sweep(tab, warm, est):
+        init = controller_init(warm, batch_shape=tab.shape[:1])
+
+        def body(state, tp_t):
+            return jax.vmap(step)(tab, state, tp_t)
+
+        _, splits = lax.scan(body, init, est.T)
+        return splits.T
+
+    return sweep
+
+
+def run_controllers(tables: np.ndarray, est_tp: np.ndarray,
+                    cfg: ControllerConfig, warm_split) -> np.ndarray:
+    """(N, T) splits: N controllers over T periods as one vmap+scan.
+
+    ``tables``: (N, tp_max+1) stacked lookup rows (``StackedLookupTable
+    .tables``); ``warm_split``: scalar or (N,) deployed-split warm start."""
+    sweep = _sweep_fn(cfg.ewma_alpha, cfg.hysteresis_steps,
+                      cfg.fallback_split)
+    return np.asarray(sweep(
+        jnp.asarray(tables, jnp.int32), jnp.asarray(warm_split, jnp.int32),
+        jnp.asarray(est_tp, jnp.float32)))
+
+
+def estimate_fleet(episode: EpisodeBatch, estimator,
+                   tp_clip=TP_CLIP_MBPS) -> np.ndarray:
+    """(N, T) estimated throughput: ONE ``predict`` call per report period
+    covering the entire fleet (the AF's 0.1 s batch inference)."""
+    ecfg, params = estimator
+    assert episode.iq is not None, (
+        "estimator inference needs IQ spectrograms: generate the episode "
+        "with include_iq=True")
+    n, t_steps = episode.n_ues, episode.n_steps
+    wins = episode.kpm_windows(normalize=True).astype(np.float32)
+    alloc = episode.alloc_ratio.astype(np.float32)
+    zeros = np.zeros(n, np.float32)
+    est = np.empty((n, t_steps))
+    for t in range(t_steps):
+        data = {"kpms": wins[:, t], "iq": episode.iq[:, t].astype(np.float32),
+                "alloc": alloc, "tp": zeros}
+        est[:, t] = np.clip(predict(ecfg, params, data, batch=None),
+                            tp_clip[0], tp_clip[1])
+    return est
+
+
+def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
+                   cfg: ControllerConfig, *, warm_split=None, estimator=None,
+                   fixed_split: Optional[int] = None,
+                   ue: DeviceProfile = UE_VM_2CORE,
+                   server: DeviceProfile = EDGE_A40X2) -> FleetResult:
+    """Vectorized fleet simulation (the production path).
+
+    ``table``: one ``LookupTable`` shared by the fleet or a
+    ``StackedLookupTable`` with one row per UE. ``warm_split`` defaults to
+    ``fixed_split`` (the AF streams reports before this window) or NO_SPLIT.
+    ``estimator``: optional (EstimatorConfig, params); without it the
+    controllers see the ground-truth throughput. ``fixed_split`` also
+    attaches the fixed-policy baseline metrics as ``result.fixed``.
+    """
+    tables = (table.tables if isinstance(table, StackedLookupTable)
+              else np.broadcast_to(table.table,
+                                   (episode.n_ues, len(table.table))))
+    true_tp = np.asarray(episode.tp_mbps, float)
+    est_tp = (estimate_fleet(episode, estimator) if estimator is not None
+              else true_tp)
+    if warm_split is None:
+        warm_split = cfg.fallback_split if fixed_split is None else fixed_split
+    splits = run_controllers(tables, est_tp, cfg, warm_split)
+    delay, priv, energy = split_metrics(profile, splits, true_tp, ue, server)
+    fixed = None
+    if fixed_split is not None:
+        fsplits = np.full_like(splits, fixed_split)
+        fd, fp, fe = split_metrics(profile, fsplits, true_tp, ue, server)
+        fixed = FleetResult(fsplits, true_tp, est_tp, fd, fp, fe)
+    return FleetResult(splits, true_tp, est_tp, delay, priv, energy, fixed)
+
+
+def simulate_fleet_looped(episode: EpisodeBatch, table,
+                          profile: SplitProfile, cfg: ControllerConfig, *,
+                          warm_split=None, est_tp: Optional[np.ndarray] = None,
+                          fixed_split: Optional[int] = None,
+                          ue: DeviceProfile = UE_VM_2CORE,
+                          server: DeviceProfile = EDGE_A40X2) -> FleetResult:
+    """The legacy per-UE, per-report-period Python loop (pre-fleet fig6
+    path): one ``AdaptiveSplitController`` per UE, one objective
+    ``evaluate`` per UE per period. Kept as the equivalence reference and
+    the speedup baseline for ``benchmarks/fleet.py``."""
+    n, t_steps = episode.n_ues, episode.n_steps
+    true_tp = np.asarray(episode.tp_mbps, float)
+    if est_tp is None:
+        est_tp = true_tp
+    if warm_split is None:
+        warm_split = cfg.fallback_split if fixed_split is None else fixed_split
+    warm = np.broadcast_to(np.asarray(warm_split), (n,))
+    splits = np.empty((n, t_steps), np.int32)
+    acc = np.empty((n, t_steps, 3))
+    facc = np.empty((n, t_steps, 3)) if fixed_split is not None else None
+    for u in range(n):
+        row = table.row(u) if isinstance(table, StackedLookupTable) else table
+        ctl = AdaptiveSplitController(row, cfg)
+        ctl.reset(warm_split=int(warm[u]))
+        for t in range(t_steps):
+            l = ctl.update(float(est_tp[u, t]))
+            splits[u, t] = l
+            terms = evaluate(profile, ue, server,
+                             np.array([true_tp[u, t] * 1e6]),
+                             Weights(1, 0, 0), Constraints())
+            acc[u, t] = (terms.d_e2e[l, 0], profile.privacy[l], terms.e_ue[l])
+            if facc is not None:
+                facc[u, t] = (terms.d_e2e[fixed_split, 0],
+                              profile.privacy[fixed_split],
+                              terms.e_ue[fixed_split])
+    fixed = None
+    if facc is not None:
+        fixed = FleetResult(np.full_like(splits, fixed_split), true_tp,
+                            est_tp, facc[..., 0], facc[..., 1], facc[..., 2])
+    return FleetResult(splits, true_tp, est_tp, acc[..., 0], acc[..., 1],
+                       acc[..., 2], fixed)
