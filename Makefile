@@ -2,11 +2,12 @@
 #   make test   — the repo's tier-1 gate (full pytest suite)
 #   make smoke  — quickstart end-to-end (profile -> PSO -> controller -> split)
 #   make fleet  — fleet engine smoke (1024 UEs, equivalence + speedup)
+#   make cells  — multi-cell scheduler smoke (64 UEs x 2 cells x 3 policies)
 #   make ci     — what .github/workflows/ci.yml runs on push
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke fleet ci
+.PHONY: test smoke fleet cells ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -17,4 +18,8 @@ smoke:
 fleet:
 	$(PY) benchmarks/fleet.py --fast
 
-ci: test smoke fleet
+cells:
+	$(PY) benchmarks/fleet.py --fast --cells 2 --policy rr pf maxsinr \
+	  --sizes 64 --steps 10
+
+ci: test smoke fleet cells

@@ -10,7 +10,17 @@ the vectorized controller -> PSO -> metrics path, and reports
   * an equivalence check: the single-UE fig6 configuration run through the
     engine matches the sequential implementation to float tolerance.
 
+With ``--cells C`` the sweep instead runs the multi-cell contended
+setting (``repro.sim.cells``): UEs spread over C load-coupled cells, a
+quarter of the fleet handing over to the neighbour cell mid-episode, and
+each cell's gNB arbitrating PRBs per report period under every requested
+``--policy`` (rr / pf / maxsinr). Reports per-policy Jain fairness of the
+served throughput next to the fig6-style delay / energy / privacy
+aggregates, plus a 1-cell no-coupling equivalence pin against the
+uncontended engine (the scheduler hook is a no-op by default).
+
 Run:  PYTHONPATH=src python benchmarks/fleet.py [--fast] [--sizes 1 64 1024]
+      PYTHONPATH=src python benchmarks/fleet.py --cells 4 --policy pf
 Also exposed as ``run(state)`` for benchmarks/run.py.
 """
 from __future__ import annotations
@@ -28,10 +38,27 @@ if __package__ in (None, ""):  # `python benchmarks/fleet.py`
 from benchmarks import fig6_adaptive
 from benchmarks.common import FAST, record
 from repro.channel.scenarios import SCENARIOS, WINDOW, gen_episode_batch
-from repro.sim import simulate_fleet, simulate_fleet_looped
+from repro.sim import (SchedulerConfig, attach_ring, build_cells_episode,
+                       handover_grid, ring_coupling, simulate_cells,
+                       simulate_fleet, simulate_fleet_looped)
+from repro.sim.sched import POLICIES
 
 LOOP_REF_UES = 32  # the looped path is timed on a slice this big (its
 # per-UE cost is constant, so the UE-steps/sec rate transfers to any N)
+
+
+def scenario_grid(n: int, T: int, rng: np.random.Generator,
+                  handover_frac: float = 0.25):
+    """(N, T + WINDOW) scenario grid: scenarios cycle S0-S3 across UEs and
+    ``handover_frac`` of the fleet hands over to the next scenario
+    mid-episode. Returns the grid and the handed-over UE indices."""
+    base = np.asarray(SCENARIOS)[np.arange(n) % len(SCENARIOS)]
+    grid = np.repeat(base[:, None], T + WINDOW, axis=1)
+    n_h = int(round(n * handover_frac))
+    hover = rng.choice(n, n_h, replace=False) if n_h else np.array([], int)
+    nxt = np.asarray(SCENARIOS)[(np.arange(n) + 1) % len(SCENARIOS)]
+    grid[hover, WINDOW + T // 2:] = nxt[hover, None]
+    return grid, hover
 
 
 def build_fleet_episode(n: int, T: int, rng: np.random.Generator,
@@ -39,12 +66,7 @@ def build_fleet_episode(n: int, T: int, rng: np.random.Generator,
     """Mixed-scenario fleet: scenarios cycle S0-S3 across UEs, loads are
     heterogeneous, and ``handover_frac`` of the fleet hands over to the
     next scenario mid-episode."""
-    base = np.asarray(SCENARIOS)[np.arange(n) % len(SCENARIOS)]
-    grid = np.repeat(base[:, None], T + WINDOW, axis=1)
-    n_h = int(round(n * handover_frac))
-    hover = rng.choice(n, n_h, replace=False) if n_h else np.array([], int)
-    nxt = np.asarray(SCENARIOS)[(np.arange(n) + 1) % len(SCENARIOS)]
-    grid[hover, WINDOW + T // 2:] = nxt[hover, None]
+    grid, hover = scenario_grid(n, T, rng, handover_frac)
     loads = rng.uniform(0.05, 1.0, n)
     ep = gen_episode_batch(grid, T, rng, load_ratio=loads, include_iq=False)
     return ep, hover
@@ -104,6 +126,89 @@ def fleet_cell(n: int, T: int, prof, table, cfg, fixed, rng, t0,
     return out
 
 
+def check_cells_equivalence(prof, table, cfg, fixed, t0) -> bool:
+    """1 cell + no coupling + no scheduler through the cells layer must be
+    the PR-2 engine, bit-for-bit on splits and float-identical on
+    metrics: the scheduler hook is a no-op by default."""
+    rng = np.random.default_rng(11)
+    n, T = 64, 20
+    grid, _ = scenario_grid(n, T, rng)
+    cgrid = np.zeros((n, T + WINDOW), int)
+    ep = build_cells_episode(grid, T, rng, cgrid, None)
+    base = simulate_fleet(ep, table, prof, cfg, fixed_split=fixed)
+    cell = simulate_cells(ep, cgrid, table, prof, cfg, sched=None,
+                          fixed_split=fixed)
+    splits_eq = np.array_equal(cell.fleet.splits, base.splits)
+    metrics_eq = all(np.array_equal(getattr(cell.fleet, f), getattr(base, f))
+                     for f in ("delay_s", "privacy", "energy_j"))
+    ok = splits_eq and metrics_eq
+    record("cells/noop_equivalence", t0,
+           f"splits_identical={splits_eq};metrics_identical={metrics_eq};"
+           f"ok={ok}")
+    return ok
+
+
+def cells_cell(n: int, T: int, n_cells: int, policy: str, prof, table, cfg,
+               fixed, rng, t0) -> dict:
+    """One contended configuration: N UEs over C coupled cells under one
+    scheduling policy, with scenario + inter-cell handover."""
+    grid, _ = scenario_grid(n, T, rng)
+    cgrid = handover_grid(attach_ring(n, n_cells), T + WINDOW, 0.25, rng,
+                          n_cells=n_cells)
+    ep = build_cells_episode(grid, T, rng, cgrid, ring_coupling(n_cells))
+    sched = SchedulerConfig(policy=policy)
+    kw = dict(sched=sched, fixed_split=fixed)
+    simulate_cells(ep, cgrid, table, prof, cfg, **kw)  # warm the jit
+    t1 = time.perf_counter()
+    res = simulate_cells(ep, cgrid, table, prof, cfg, **kw)
+    dt = time.perf_counter() - t1
+    rate = n * T / dt
+    cons_dev = float(np.abs(res.share_sums() - 1.0).max())
+    jain = res.jain()
+    out = {"n": n, "cells": n_cells, "policy": policy, "rate": rate,
+           "jain": jain, "cons_dev": cons_dev}
+    record(f"cells/n{n}_c{n_cells}_{policy}", t0,
+           f"ue_steps_per_sec={rate:.0f};jain={jain:.3f};"
+           f"served_mbps_mean={res.served_mbps.mean():.2f};"
+           f"delay_ms={res.fleet.delay_s.mean()*1e3:.0f};"
+           f"energy_J={res.fleet.energy_j.mean():.2f};"
+           f"privacy={res.fleet.privacy.mean():.3f};"
+           f"prb_conservation_dev={cons_dev:.1e};cell_handover_ues="
+           f"{int((res.cell_idx[:, 0] != res.cell_idx[:, -1]).sum())}")
+    return out
+
+
+def run_cells(state: dict, n_cells: int, policies=None, sizes=None,
+              T: int | None = None) -> bool:
+    """Per-policy multi-cell sweep + the no-op equivalence pin."""
+    t0 = time.time()
+    prof = state.get("vgg_profile")
+    if prof is None:
+        from repro.models.vgg import FULL, vgg_split_profile
+        prof = state["vgg_profile"] = vgg_split_profile(FULL)
+    table, cfg, fixed = fig6_adaptive.fig6_table(prof)
+    policies = policies or list(POLICIES)
+    sizes = sizes or [64, 1024]
+    T = T or (30 if FAST else 100)
+    ok_eq = check_cells_equivalence(prof, table, cfg, fixed, t0)
+    rng = np.random.default_rng(7)
+    cells = [cells_cell(n, T, n_cells, p, prof, table, cfg, fixed, rng, t0)
+             for n in sizes for p in policies]
+    state["cells"] = cells
+    ok_cons = all(c["cons_dev"] < 1e-3 for c in cells)
+    # max C/I starves; rr must be measurably fairer at the SAME fleet size
+    # (Jain is strongly n-dependent, so never compare across sizes)
+    jain = {(c["n"], c["policy"]): c["jain"] for c in cells}
+    ok_fair = all(jain[(n, "maxsinr")] < jain[(n, "rr")] for n in sizes
+                  if ("maxsinr" in policies and "rr" in policies))
+    record("cells/claims", t0,
+           f"noop_equivalence={ok_eq};prb_conservation={ok_cons};"
+           f"maxsinr_less_fair_than_rr={ok_fair};"
+           f"max_fleet={max(sizes)};n_cells={n_cells};"
+           f"policies={'/'.join(policies)}")
+    return ok_eq and ok_cons and ok_fair
+
+
 def run(state: dict, sizes=None, T: int | None = None) -> bool:
     t0 = time.time()
     prof = state.get("vgg_profile")
@@ -134,15 +239,27 @@ def main() -> int:
                     help="CI smoke: short episodes, sizes 1/64/1024")
     ap.add_argument("--sizes", type=int, nargs="+", default=None)
     ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--cells", type=int, default=0,
+                    help="run the multi-cell contended sweep over this many "
+                    "load-coupled cells instead of the plain fleet sweep")
+    ap.add_argument("--policy", nargs="+", default=None, choices=POLICIES,
+                    help="scheduler policies for --cells (default: all)")
     args = ap.parse_args()
     if args.fast:
         import benchmarks.common as common
         common.FAST = True
         global FAST
         FAST = True
+    T = args.steps or (30 if (FAST or args.fast) else 100)
+    if args.cells:
+        sizes = args.sizes or ([64, 1024] if (FAST or args.fast)
+                               else [64, 1024, 4096])
+        ok = run_cells({}, args.cells, policies=args.policy, sizes=sizes,
+                       T=T)
+        print(f"# cells sweep {'OK' if ok else 'FAILED'}", flush=True)
+        return 0 if ok else 1
     sizes = args.sizes or ([1, 64, 1024] if (FAST or args.fast)
                            else [1, 64, 1024, 4096])
-    T = args.steps or (30 if (FAST or args.fast) else 100)
     ok = run({}, sizes=sizes, T=T)
     print(f"# fleet sweep {'OK' if ok else 'FAILED'}", flush=True)
     return 0 if ok else 1

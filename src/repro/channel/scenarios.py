@@ -35,9 +35,28 @@ class Sample:
     int_dbm: float
 
 
-def interference_trace_batch(scenarios, T: int,
-                             rng: np.random.Generator) -> np.ndarray:
-    """(N, T) interference power (dBm): one trace per requested scenario."""
+def power_sum_dbm(base_dbm: np.ndarray, extra_mw: np.ndarray) -> np.ndarray:
+    """Power-sum an extra interference term (mW) onto a dBm trace.
+
+    Used for the load-dependent inter-cell floor: the scenario's own
+    interference and the neighbour-cell contribution add in linear power.
+    Clipped to the model's 14 dBm ceiling (deep OOC) like the base traces.
+    """
+    p_mw = 10 ** (np.asarray(base_dbm, float) / 10) + np.asarray(
+        extra_mw, float)
+    return np.minimum(10 * np.log10(np.maximum(p_mw, 1e-12)), 14.0)
+
+
+def interference_trace_batch(scenarios, T: int, rng: np.random.Generator,
+                             extra_mw: np.ndarray | None = None
+                             ) -> np.ndarray:
+    """(N, T) interference power (dBm): one trace per requested scenario.
+
+    ``extra_mw``: optional (N, T) load-dependent floor (linear mW) power-
+    summed onto every trace — e.g. the neighbour-cell contribution
+    ``coupling @ cell_load`` from ``repro.sim.cells``. It raises even the
+    "none" rows: an S0 UE in a loaded neighbourhood is no longer quiet.
+    """
     scen = np.asarray(scenarios)
     N = len(scen)
     base = rng.uniform(-30, 10, N)
@@ -46,7 +65,8 @@ def interference_trace_batch(scenarios, T: int,
     # bursty on/off jammer
     on = np.sin(np.arange(T)[None] / rng.uniform(3, 10, N)[:, None]) > -0.3
     tr = np.where((scen == "jamming")[:, None] & ~on, -60.0, tr)
-    return np.where((scen == "none")[:, None], -60.0, np.clip(tr, -60, 14))
+    tr = np.where((scen == "none")[:, None], -60.0, np.clip(tr, -60, 14))
+    return tr if extra_mw is None else power_sum_dbm(tr, extra_mw)
 
 
 def interference_trace(scenario: str, T: int,
@@ -90,13 +110,18 @@ class EpisodeBatch:
 def gen_episode_batch(scenarios, T: int, rng: np.random.Generator,
                       load_ratio=None, n_sc: int = iqmod.N_SC,
                       include_iq: bool = True,
-                      int_dbm: np.ndarray | None = None) -> EpisodeBatch:
+                      int_dbm: np.ndarray | None = None,
+                      extra_int_mw: np.ndarray | None = None) -> EpisodeBatch:
     """Generate N episodes in one vectorized pass.
 
     ``scenarios``: (N,) scenario names, or an (N, T + WINDOW) name grid for
     mid-episode scenario handover. ``load_ratio``: None (drawn per UE),
     scalar, or (N,). ``int_dbm`` overrides the drawn interference traces
     (shape (N, T + WINDOW) — e.g. fixed operating points around a mean).
+    ``extra_int_mw``: optional (N, T + WINDOW) load-dependent interference
+    floor (linear mW, e.g. neighbour-cell load x coupling from
+    ``repro.sim.cells``) power-summed onto the traces before KPMs, IQ and
+    labels are derived, so every downstream signal sees the coupling.
     """
     scen = np.asarray(scenarios)
     scen_grid = scen if scen.ndim == 2 else None
@@ -106,7 +131,9 @@ def gen_episode_batch(scenarios, T: int, rng: np.random.Generator,
           else np.broadcast_to(np.asarray(load_ratio, float), (N,)).copy())
     if int_dbm is None:
         if scen_grid is None:
-            tr = interference_trace_batch(scen0, T + WINDOW, rng)
+            tr = interference_trace_batch(scen0, T + WINDOW, rng,
+                                          extra_mw=extra_int_mw)
+            extra_int_mw = None  # already folded in
         else:  # handover: every cell reads its row's trace for its scenario
             tr = np.empty((N, T + WINDOW))
             for s in np.unique(scen_grid):
@@ -116,6 +143,8 @@ def gen_episode_batch(scenarios, T: int, rng: np.random.Generator,
     else:
         tr = np.asarray(int_dbm, float)
         assert tr.shape == (N, T + WINDOW), tr.shape
+    if extra_int_mw is not None:
+        tr = power_sum_dbm(tr, extra_int_mw)
     kpms = kpmmod.kpm_window_batch(tr, lr, rng,
                                    scen_grid if scen_grid is not None
                                    else scen0)

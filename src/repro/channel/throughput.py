@@ -49,6 +49,27 @@ def max_throughput_mbps(int_dbm: np.ndarray) -> np.ndarray:
     return np.maximum(tp * (1 - 0.97 * ooc), 0.5)
 
 
+PRB_FLOOR_MBPS = 0.01  # scheduling crumbs: even a starved UE sees a trickle
+
+
+def prb_scaled_mbps(tp_mbps: np.ndarray, prb_share,
+                    floor_mbps: float = PRB_FLOOR_MBPS) -> np.ndarray:
+    """Throughput on a fractional PRB grant (fluid gNB scheduler model).
+
+    ``tp_mbps`` is the full-grant max achievable rate; capacity scales
+    linearly with the granted share of the cell's PRBs. Floored so a
+    starved UE (max-C/I losers get share 0) keeps a finite E2E delay."""
+    share = np.clip(np.asarray(prb_share, float), 0.0, 1.0)
+    return np.maximum(np.asarray(tp_mbps, float) * share, floor_mbps)
+
+
+def shared_throughput_mbps(int_dbm: np.ndarray, prb_share,
+                           floor_mbps: float = PRB_FLOOR_MBPS) -> np.ndarray:
+    """Max achievable UL rate on a fractional PRB grant."""
+    return prb_scaled_mbps(max_throughput_mbps(int_dbm), prb_share,
+                           floor_mbps)
+
+
 def bler(int_dbm: np.ndarray) -> np.ndarray:
     """UL block error rate: ~10% target until OOC, then -> 1.0."""
     x = np.clip((np.asarray(int_dbm, float) - MCS_CTRL_MAX) / 3.0, 0, 1)

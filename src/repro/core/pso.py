@@ -22,6 +22,13 @@ from repro.core.profiles import SplitProfile
 
 NO_SPLIT = -1  # no feasible split at this throughput
 
+# Clamp range for throughput estimates before they hit a lookup table:
+# 1 Mbps is the first bucket the sweep fills (bucket 0 stays NO_SPLIT),
+# 130 Mbps the paper's peak rate (channel.throughput.PEAK_MBPS) and the
+# tp_max the production tables are built with. This is part of the sweep
+# config — ``repro.sim`` imports it rather than re-declaring the range.
+TP_CLIP_MBPS = (1.0, 130.0)
+
 
 @dataclasses.dataclass
 class LookupTable:

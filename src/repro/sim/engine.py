@@ -28,16 +28,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.channel import throughput as tpmod
 from repro.channel.scenarios import SCENARIOS, EpisodeBatch
 from repro.core.controller import (AdaptiveSplitController, ControllerConfig,
                                    controller_init, controller_step)
 from repro.core.energy import EDGE_A40X2, UE_VM_2CORE, DeviceProfile
 from repro.core.objective import Constraints, Weights, evaluate
 from repro.core.profiles import SplitProfile
-from repro.core.pso import LookupTable, StackedLookupTable
+# the estimator clamp range is part of the PSO sweep config, not ours
+from repro.core.pso import TP_CLIP_MBPS, LookupTable, StackedLookupTable
 from repro.estimator.train import predict
-
-TP_CLIP_MBPS = (1.0, 130.0)  # estimator outputs clamped to the PSO sweep
+from repro.sim.sched import SchedulerConfig, scheduler_init, scheduler_step
 
 
 @dataclasses.dataclass
@@ -51,6 +52,8 @@ class FleetResult:
     privacy: np.ndarray  # (N, T) dCor leak at the deployed split
     energy_j: np.ndarray  # (N, T) UE energy at the deployed split
     fixed: Optional["FleetResult"] = None  # fixed-split baseline, same shapes
+    prb_share: Optional[np.ndarray] = None  # (N, T) gNB PRB grant, if
+    # a scheduler ran; None on the default (uncontended) path
 
     @property
     def n_ues(self) -> int:
@@ -88,23 +91,49 @@ def split_metrics(profile: SplitProfile, splits: np.ndarray,
 
 
 @functools.lru_cache(maxsize=None)
-def _sweep_fn(ewma_alpha: float, hysteresis_steps: int, fallback_split: int):
-    """Compiled fleet sweep, cached per controller config (jit's own cache
-    then handles distinct fleet shapes)."""
+def _sweep_fn(ewma_alpha: float, hysteresis_steps: int, fallback_split: int,
+              sched: Optional[SchedulerConfig] = None, n_cells: int = 1):
+    """Compiled fleet sweep, cached per controller (+ scheduler) config
+    (jit's own cache then handles distinct fleet shapes).
+
+    Without a scheduler this is the PR-2 program, untouched: controllers
+    consume the estimates as-is. With one, the gNB scheduler runs *inside*
+    the scan so allocation, estimation and splitting co-evolve: each
+    period the scheduler divides every cell's PRB budget over its attached
+    UEs (PF state carried across periods), and each controller sees its
+    estimate scaled by the share it was actually granted."""
     cfg = ControllerConfig(ewma_alpha, hysteresis_steps, fallback_split)
     step = functools.partial(controller_step, cfg=cfg)
 
+    if sched is None:
+        @jax.jit
+        def sweep(tab, warm, est):
+            init = controller_init(warm, batch_shape=tab.shape[:1])
+
+            def body(state, tp_t):
+                return jax.vmap(step)(tab, state, tp_t)
+
+            _, splits = lax.scan(body, init, est.T)
+            return splits.T
+
+        return sweep
+
     @jax.jit
-    def sweep(tab, warm, est):
-        init = controller_init(warm, batch_shape=tab.shape[:1])
+    def sweep_scheduled(tab, warm, est, rate, cells):
+        init = (controller_init(warm, batch_shape=tab.shape[:1]),
+                scheduler_init(tab.shape[0]))
 
-        def body(state, tp_t):
-            return jax.vmap(step)(tab, state, tp_t)
+        def body(carry, xs):
+            ctl, ss = carry
+            est_t, rate_t, cell_t = xs
+            ss, share = scheduler_step(sched, n_cells, ss, cell_t, rate_t)
+            ctl, split = jax.vmap(step)(tab, ctl, est_t * share)
+            return (ctl, ss), (split, share)
 
-        _, splits = lax.scan(body, init, est.T)
-        return splits.T
+        _, (splits, shares) = lax.scan(body, init, (est.T, rate.T, cells.T))
+        return splits.T, shares.T
 
-    return sweep
+    return sweep_scheduled
 
 
 def run_controllers(tables: np.ndarray, est_tp: np.ndarray,
@@ -118,6 +147,23 @@ def run_controllers(tables: np.ndarray, est_tp: np.ndarray,
     return np.asarray(sweep(
         jnp.asarray(tables, jnp.int32), jnp.asarray(warm_split, jnp.int32),
         jnp.asarray(est_tp, jnp.float32)))
+
+
+def run_scheduled(tables: np.ndarray, est_tp: np.ndarray,
+                  cfg: ControllerConfig, warm_split,
+                  sched: SchedulerConfig, n_cells: int, cell_idx: np.ndarray,
+                  rate_mbps: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """((N, T) splits, (N, T) PRB shares): scheduler + controllers in one
+    scan. ``cell_idx``: (N, T) cell of each UE per period (inter-cell
+    handover = the index changing mid-episode); ``rate_mbps``: (N, T) the
+    gNB's CQI view (full-grant achievable rate) driving the scheduler."""
+    sweep = _sweep_fn(cfg.ewma_alpha, cfg.hysteresis_steps,
+                      cfg.fallback_split, sched, int(n_cells))
+    splits, shares = sweep(
+        jnp.asarray(tables, jnp.int32), jnp.asarray(warm_split, jnp.int32),
+        jnp.asarray(est_tp, jnp.float32), jnp.asarray(rate_mbps, jnp.float32),
+        jnp.asarray(cell_idx, jnp.int32))
+    return np.asarray(splits), np.asarray(shares)
 
 
 def estimate_fleet(episode: EpisodeBatch, estimator,
@@ -145,7 +191,10 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
                    cfg: ControllerConfig, *, warm_split=None, estimator=None,
                    fixed_split: Optional[int] = None,
                    ue: DeviceProfile = UE_VM_2CORE,
-                   server: DeviceProfile = EDGE_A40X2) -> FleetResult:
+                   server: DeviceProfile = EDGE_A40X2,
+                   sched: Optional[SchedulerConfig] = None,
+                   cell_idx: Optional[np.ndarray] = None,
+                   n_cells: int = 1) -> FleetResult:
     """Vectorized fleet simulation (the production path).
 
     ``table``: one ``LookupTable`` shared by the fleet or a
@@ -154,6 +203,14 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
     ``estimator``: optional (EstimatorConfig, params); without it the
     controllers see the ground-truth throughput. ``fixed_split`` also
     attaches the fixed-policy baseline metrics as ``result.fixed``.
+
+    ``sched`` (default None — the hook is a strict no-op and this is the
+    PR-2 program, bit-for-bit): a ``SchedulerConfig`` puts a gNB PRB
+    scheduler inside the scan. ``cell_idx`` (N, T) assigns each UE to one
+    of ``n_cells`` cells per period; every UE's throughput — the estimate
+    its controller consumes and the ground truth its metrics are gathered
+    at — is scaled by the PRB share the scheduler granted it (see
+    ``repro.sim.cells`` for the orchestration layer).
     """
     tables = (table.tables if isinstance(table, StackedLookupTable)
               else np.broadcast_to(table.table,
@@ -163,14 +220,24 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
               else true_tp)
     if warm_split is None:
         warm_split = cfg.fallback_split if fixed_split is None else fixed_split
-    splits = run_controllers(tables, est_tp, cfg, warm_split)
-    delay, priv, energy = split_metrics(profile, splits, true_tp, ue, server)
+    if sched is None:
+        splits, shares, eff_tp = (
+            run_controllers(tables, est_tp, cfg, warm_split), None, true_tp)
+    else:
+        assert cell_idx is not None, "a scheduler needs a (N, T) cell_idx"
+        splits, shares = run_scheduled(tables, est_tp, cfg, warm_split,
+                                       sched, n_cells, cell_idx, true_tp)
+        eff_tp = tpmod.prb_scaled_mbps(true_tp, shares)
+        est_tp = est_tp * shares  # what the controllers consumed
+    delay, priv, energy = split_metrics(profile, splits, eff_tp, ue, server)
     fixed = None
     if fixed_split is not None:
         fsplits = np.full_like(splits, fixed_split)
-        fd, fp, fe = split_metrics(profile, fsplits, true_tp, ue, server)
-        fixed = FleetResult(fsplits, true_tp, est_tp, fd, fp, fe)
-    return FleetResult(splits, true_tp, est_tp, delay, priv, energy, fixed)
+        fd, fp, fe = split_metrics(profile, fsplits, eff_tp, ue, server)
+        fixed = FleetResult(fsplits, true_tp, est_tp, fd, fp, fe,
+                            prb_share=shares)
+    return FleetResult(splits, true_tp, est_tp, delay, priv, energy, fixed,
+                       prb_share=shares)
 
 
 def simulate_fleet_looped(episode: EpisodeBatch, table,

@@ -290,6 +290,20 @@ def test_simulate_fleet_stacked_tables_per_ue():
     assert not np.array_equal(res.splits[0], res.splits[1])
 
 
+def test_tp_clip_single_source():
+    """The estimator clamp range is owned by the PSO sweep config; the sim
+    engine must import it, not re-declare it (the two stay equal by
+    construction)."""
+    from repro.channel import throughput as tpm
+    from repro.core import pso
+    from repro.sim import engine
+    import repro.sim as sim
+    assert engine.TP_CLIP_MBPS is pso.TP_CLIP_MBPS
+    assert sim.TP_CLIP_MBPS is pso.TP_CLIP_MBPS
+    # and the range itself matches the sweep: bucket 1 .. the paper's peak
+    assert pso.TP_CLIP_MBPS == (1.0, tpm.PEAK_MBPS)
+
+
 def test_estimate_fleet_one_predict_per_period():
     """Batched estimator inference: (N, T) predictions, clipped into the
     PSO sweep range, one forward per report period."""
