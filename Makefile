@@ -1,13 +1,15 @@
 # Tier-1 verification, wrapped so CI and humans run the same thing.
-#   make test   — the repo's tier-1 gate (full pytest suite)
-#   make smoke  — quickstart end-to-end (profile -> PSO -> controller -> split)
-#   make fleet  — fleet engine smoke (1024 UEs, equivalence + speedup)
-#   make cells  — multi-cell scheduler smoke (64 UEs x 2 cells x 3 policies)
-#   make ci     — what .github/workflows/ci.yml runs on push
+#   make test       — the repo's tier-1 gate (full pytest suite)
+#   make smoke      — quickstart end-to-end (profile -> PSO -> controller -> split)
+#   make fleet      — fleet engine smoke (1024 UEs, equivalence + speedup)
+#   make cells      — multi-cell scheduler smoke (64 UEs x 2 cells x 3 policies)
+#   make mesh       — mesh-sharded estimator serving smoke (sharded == unsharded)
+#   make docs-check — fail on broken intra-repo links in README/docs
+#   make ci         — what .github/workflows/ci.yml runs on push
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke fleet cells ci
+.PHONY: test smoke fleet cells mesh docs-check ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -22,4 +24,10 @@ cells:
 	$(PY) benchmarks/fleet.py --fast --cells 2 --policy rr pf maxsinr \
 	  --sizes 64 --steps 10
 
-ci: test smoke fleet cells
+mesh:
+	$(PY) benchmarks/fleet.py --fast --mesh 4x2 --sizes 32 64 --steps 8
+
+docs-check:
+	$(PY) tools/docs_check.py
+
+ci: test smoke fleet cells mesh docs-check

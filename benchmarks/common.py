@@ -1,11 +1,43 @@
-"""Shared benchmark plumbing: timing + CSV rows + fast-mode switch."""
+"""Shared benchmark plumbing: timing + CSV rows + fast-mode switch +
+machine-config-stamped JSON output."""
 from __future__ import annotations
 
+import json
 import os
+import platform
 import time
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
 RESULTS: list[tuple[str, float, str]] = []
+
+
+def machine_config() -> dict:
+    """The machine/devices side of every benchmark record: BENCH_*
+    trajectories are only comparable across runs when the backing
+    platform, device count and jax build ride along in the JSON."""
+    cfg: dict = {"python": platform.python_version(),
+                 "machine": platform.machine(),
+                 "cpu_count": os.cpu_count(), "fast": FAST,
+                 "xla_flags": os.environ.get("XLA_FLAGS", "")}
+    try:
+        import jax
+        cfg.update(jax=jax.__version__, backend=jax.default_backend(),
+                   device_count=jax.device_count(),
+                   device_kind=jax.devices()[0].device_kind)
+    except Exception:  # pragma: no cover - jax import is all-or-nothing
+        pass
+    return cfg
+
+
+def write_json(path: str, extra: dict | None = None) -> None:
+    """Dump every ``record()`` row plus :func:`machine_config` (and any
+    sweep-specific ``extra``, e.g. the serving-mesh shape) to ``path``."""
+    payload = {"config": machine_config(), **(extra or {}),
+               "records": [{"name": n, "us_per_call": us, "derived": d}
+                           for n, us, d in RESULTS]}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
 
 
 def record(name: str, t0: float, derived: str):

@@ -19,16 +19,37 @@ served throughput next to the fig6-style delay / energy / privacy
 aggregates, plus a 1-cell no-coupling equivalence pin against the
 uncontended engine (the scheduler hook is a no-op by default).
 
+With ``--mesh DxM`` (or ``DxExM`` for the expert-parallel variant) it
+runs the estimator-serving sweep instead: per-report-period fleet
+inference (``estimate_fleet``) mesh-sharded over the host mesh via
+``repro.sim.serving`` vs the unsharded path, reporting UE-steps/s for
+both, the real-time UE capacity per chip, an allclose pin between the
+two, and the sched=None bit-identical regression. ``--json PATH`` dumps
+every record plus the machine + mesh config for cross-machine BENCH_*
+comparison.
+
 Run:  PYTHONPATH=src python benchmarks/fleet.py [--fast] [--sizes 1 64 1024]
       PYTHONPATH=src python benchmarks/fleet.py --cells 4 --policy pf
+      PYTHONPATH=src python benchmarks/fleet.py --mesh 4x2 --fast
 Also exposed as ``run(state)`` for benchmarks/run.py.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import pathlib
 import sys
 import time
+
+# the mesh sweep wants several host devices; must be decided before the
+# repro imports below transitively import jax (both --mesh SPEC and
+# --mesh=SPEC spellings)
+if any(a == "--mesh" or a.startswith("--mesh=") for a in sys.argv) and (
+        "xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
 
 import numpy as np
 
@@ -36,15 +57,19 @@ if __package__ in (None, ""):  # `python benchmarks/fleet.py`
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 from benchmarks import fig6_adaptive
-from benchmarks.common import FAST, record
+from benchmarks.common import FAST, record, write_json
 from repro.channel.scenarios import SCENARIOS, WINDOW, gen_episode_batch
 from repro.sim import (SchedulerConfig, attach_ring, build_cells_episode,
-                       handover_grid, ring_coupling, simulate_cells,
-                       simulate_fleet, simulate_fleet_looped)
+                       estimate_fleet, handover_grid, make_serving_mesh,
+                       ring_coupling, simulate_cells, simulate_fleet,
+                       simulate_fleet_looped)
 from repro.sim.sched import POLICIES
 
 LOOP_REF_UES = 32  # the looped path is timed on a slice this big (its
 # per-UE cost is constant, so the UE-steps/sec rate transfers to any N)
+
+REPORT_PERIOD_S = 0.1  # the AF's estimator report period: serving a fleet
+# in real time means one whole-fleet predict within this budget
 
 
 def scenario_grid(n: int, T: int, rng: np.random.Generator,
@@ -209,6 +234,82 @@ def run_cells(state: dict, n_cells: int, policies=None, sizes=None,
     return ok_eq and ok_cons and ok_fair
 
 
+def mesh_estimator():
+    """Reduced estimator for the serving sweep (random weights: the sweep
+    measures serving capacity, not accuracy — same layer shapes/dataflow
+    as the paper's, spectrogram height cut so CPU hosts finish)."""
+    import jax
+    from repro.estimator.model import EstimatorConfig, init_estimator
+    e = EstimatorConfig(n_sc=64 if FAST else 256, lstm_hidden=16, hidden=16)
+    return e, init_estimator(e, jax.random.PRNGKey(0))
+
+
+def mesh_sweep_cell(n: int, T: int, est, serving, rng, t0) -> dict:
+    """One fleet size: unsharded vs mesh-sharded per-period inference."""
+    grid, _ = scenario_grid(n, T, rng)
+    ep = gen_episode_batch(grid, T, rng, include_iq=True, n_sc=est[0].n_sc)
+    base = estimate_fleet(ep, est)  # warm the single-device jit
+    t1 = time.perf_counter()
+    base = estimate_fleet(ep, est)
+    dt_base = time.perf_counter() - t1
+    shd = estimate_fleet(ep, est, serving=serving)  # warm the SPMD program
+    t2 = time.perf_counter()
+    shd = estimate_fleet(ep, est, serving=serving)
+    dt_shd = time.perf_counter() - t2
+    close = bool(np.allclose(shd, base, rtol=1e-4, atol=1e-3))
+    # real-time capacity: UEs one chip sustains at one fleet predict per
+    # REPORT_PERIOD_S (linear-in-N extrapolation from the measured period)
+    cap_chip = n * (REPORT_PERIOD_S / (dt_shd / T)) / serving.n_chips
+    out = {"n": n, "rate": n * T / dt_shd, "rate_unsharded": n * T / dt_base,
+           "ue_capacity_per_chip": cap_chip, "allclose": close}
+    record(f"mesh/n{n}", t0,
+           f"mesh={serving.describe()};chips={serving.n_chips};"
+           f"ue_steps_per_sec={out['rate']:.0f};"
+           f"unsharded_ue_steps_per_sec={out['rate_unsharded']:.0f};"
+           f"ue_capacity_per_chip={cap_chip:.0f};allclose={close}")
+    return out
+
+
+def run_mesh(state: dict, mesh_spec: str, sizes=None,
+             T: int | None = None) -> bool:
+    """Estimator-serving sweep under a host mesh + the regression pins."""
+    t0 = time.time()
+    prof = state.get("vgg_profile")
+    if prof is None:
+        from repro.models.vgg import FULL, vgg_split_profile
+        prof = state["vgg_profile"] = vgg_split_profile(FULL)
+    table, cfg, fixed = fig6_adaptive.fig6_table(prof)
+    # the serving path must not disturb either standing guarantee: engine
+    # vs looped (fig6) and the sched=None bit-identical no-op pin
+    ok_eq = check_fig6_equivalence(prof, table, cfg, fixed, t0)
+    ok_noop = check_cells_equivalence(prof, table, cfg, fixed, t0)
+    serving = make_serving_mesh(mesh_spec)
+    est = mesh_estimator()
+    sizes = sizes or ([64, 256] if FAST else [64, 256, 1024])
+    T = T or (10 if FAST else 30)
+    rng = np.random.default_rng(7)
+    cells = [mesh_sweep_cell(n, T, est, serving, rng, t0) for n in sizes]
+    ok_close = all(c["allclose"] for c in cells)
+    # composition: the engine scan consuming the mesh-sharded estimates
+    n0 = sizes[0]
+    grid, _ = scenario_grid(n0, T, rng)
+    ep = gen_episode_batch(grid, T, rng, include_iq=True, n_sc=est[0].n_sc)
+    res = simulate_fleet(ep, table, prof, cfg, estimator=est,
+                         serving=serving, fixed_split=fixed)
+    record("mesh/engine_compose", t0,
+           f"n={n0};mesh={serving.describe()};"
+           f"delay_ms={res.delay_s.mean()*1e3:.0f};"
+           f"energy_J={res.energy_j.mean():.2f};"
+           f"privacy={res.privacy.mean():.3f}")
+    state["mesh"] = {"spec": serving.describe(), "chips": serving.n_chips,
+                     "cells": cells}
+    record("mesh/claims", t0,
+           f"fig6_equivalence={ok_eq};sched_noop_identical={ok_noop};"
+           f"sharded_allclose={ok_close};mesh={serving.describe()};"
+           f"max_fleet={max(sizes)}")
+    return ok_eq and ok_noop and ok_close
+
+
 def run(state: dict, sizes=None, T: int | None = None) -> bool:
     t0 = time.time()
     prof = state.get("vgg_profile")
@@ -244,6 +345,12 @@ def main() -> int:
                     "load-coupled cells instead of the plain fleet sweep")
     ap.add_argument("--policy", nargs="+", default=None, choices=POLICIES,
                     help="scheduler policies for --cells (default: all)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="run the mesh-sharded estimator-serving sweep on "
+                    "a DxM (data x model) or DxExM (x expert) host mesh")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all records + machine/mesh config as "
+                    "JSON (comparable across machines)")
     args = ap.parse_args()
     if args.fast:
         import benchmarks.common as common
@@ -251,17 +358,25 @@ def main() -> int:
         global FAST
         FAST = True
     T = args.steps or (30 if (FAST or args.fast) else 100)
-    if args.cells:
+    state: dict = {}
+    if args.mesh:
+        T = args.steps or (10 if (FAST or args.fast) else 30)
+        ok = run_mesh(state, args.mesh, sizes=args.sizes, T=T)
+        label = "mesh sweep"
+    elif args.cells:
         sizes = args.sizes or ([64, 1024] if (FAST or args.fast)
                                else [64, 1024, 4096])
-        ok = run_cells({}, args.cells, policies=args.policy, sizes=sizes,
+        ok = run_cells(state, args.cells, policies=args.policy, sizes=sizes,
                        T=T)
-        print(f"# cells sweep {'OK' if ok else 'FAILED'}", flush=True)
-        return 0 if ok else 1
-    sizes = args.sizes or ([1, 64, 1024] if (FAST or args.fast)
-                           else [1, 64, 1024, 4096])
-    ok = run({}, sizes=sizes, T=T)
-    print(f"# fleet sweep {'OK' if ok else 'FAILED'}", flush=True)
+        label = "cells sweep"
+    else:
+        sizes = args.sizes or ([1, 64, 1024] if (FAST or args.fast)
+                               else [1, 64, 1024, 4096])
+        ok = run(state, sizes=sizes, T=T)
+        label = "fleet sweep"
+    if args.json:
+        write_json(args.json, {"mesh": state.get("mesh"), "ok": ok})
+    print(f"# {label} {'OK' if ok else 'FAILED'}", flush=True)
     return 0 if ok else 1
 
 

@@ -114,14 +114,24 @@ def gen_episode_batch(scenarios, T: int, rng: np.random.Generator,
                       extra_int_mw: np.ndarray | None = None) -> EpisodeBatch:
     """Generate N episodes in one vectorized pass.
 
+    Returns an ``EpisodeBatch`` of stacked arrays — the fleet engine's
+    input: ``int_dbm`` (N, T + WINDOW) interference traces in dBm,
+    ``kpms`` (N, T + WINDOW, 15) raw KPM reports, ``tp_mbps`` (N, T)
+    ground-truth throughput labels in Mbps, and (when ``include_iq``)
+    ``iq`` (N, T, 2, n_sc, 14) spectrograms. The first WINDOW trace steps
+    are warm-up that fills the estimator's first KPM window; the T
+    remaining steps are the 0.1 s report periods.
+
     ``scenarios``: (N,) scenario names, or an (N, T + WINDOW) name grid for
     mid-episode scenario handover. ``load_ratio``: None (drawn per UE),
-    scalar, or (N,). ``int_dbm`` overrides the drawn interference traces
-    (shape (N, T + WINDOW) — e.g. fixed operating points around a mean).
-    ``extra_int_mw``: optional (N, T + WINDOW) load-dependent interference
-    floor (linear mW, e.g. neighbour-cell load x coupling from
-    ``repro.sim.cells``) power-summed onto the traces before KPMs, IQ and
-    labels are derived, so every downstream signal sees the coupling.
+    scalar, or (N,) — the UE's UL PRB allocation ratio in [0, 1].
+    ``int_dbm`` overrides the drawn interference traces
+    (shape (N, T + WINDOW), dBm — e.g. fixed operating points around a
+    mean). ``extra_int_mw``: optional (N, T + WINDOW) load-dependent
+    interference floor (linear mW, e.g. neighbour-cell load x coupling
+    from ``repro.sim.cells``) power-summed onto the traces before KPMs,
+    IQ and labels are derived, so every downstream signal sees the
+    coupling.
     """
     scen = np.asarray(scenarios)
     scen_grid = scen if scen.ndim == 2 else None

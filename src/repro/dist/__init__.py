@@ -12,5 +12,6 @@ from repro.dist.sharding import (  # noqa: F401
     axis_size,
     constrain,
     kv_repeat,
+    put,
     use_rules,
 )

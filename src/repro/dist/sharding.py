@@ -51,9 +51,10 @@ MeshAxes = Union[None, str, Tuple[str, ...]]
 #     parallelism); ctx_attn is the context-parallel fallback used when a
 #     config's head count cannot shard over "model".
 #   params: fsdp is the ZeRO-3 axis; heads/kv/ff/vocab are the tensor-
-#     parallel contractions on "model"; experts maps to an "expert" mesh
-#     axis that production meshes do not (yet) carry, so MoE weights stay
-#     2D-sharded (fsdp x ff) until the EP-serving hillclimb adds it.
+#     parallel contractions on "model"; experts maps to the "expert" mesh
+#     axis carried by the EP mesh variants (make_production_mesh(ep=True),
+#     make_host_mesh(expert=)) — on non-EP meshes it falls back replicated
+#     and MoE weights stay 2D-sharded (fsdp x ff).
 #   cap: MoE capacity slots; sharding them over "model" turns the expert
 #     down-projection's cross-"model" reduction into a reduce-scatter.
 #   data/model/pod: passthrough names so launch code can talk about mesh
@@ -219,6 +220,23 @@ def constrain(x, axes):
     if all(e is None for e in spec):
         return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(rs.mesh, spec))
+
+
+def put(x, axes):
+    """``jax.device_put`` with the sharding the active rules give these
+    logical axis names (with the same divisibility/absent-axis fallbacks
+    as :func:`constrain`).
+
+    Identity when no ruleset is active or the mesh is a single device —
+    the serving path's input placement degrades to plain host arrays on
+    CPU tests. Unlike ``constrain`` this runs *outside* jit: it commits
+    the array to the mesh so a jitted program with unspecified
+    in_shardings picks the distributed layout up from its arguments.
+    """
+    rs = active()
+    if rs is None or rs.mesh.size <= 1:
+        return x
+    return jax.device_put(x, rs.sharding(axes, x.shape))
 
 
 def kv_repeat(kv_heads: int, n_heads: int) -> int:

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.dist.sharding import constrain
 from repro.models.template import ParamSpec, init_from_template
 
 F32 = jnp.float32
@@ -104,12 +105,23 @@ def cnn_branch(p, iq, *, dropout_rate=0.0, key=None):
 
 def estimator_forward(e: EstimatorConfig, params, kpms, iq, alloc, *,
                       train: bool = False, key=None):
-    """Returns predicted max throughput in Mbps, shape (B,)."""
-    v_t = lstm_branch(params["lstm"], kpms.astype(F32))
-    v_s = cnn_branch(params["cnn"], iq.astype(F32),
+    """Returns predicted max throughput in Mbps, shape (B,).
+
+    The B dim carries the logical ``batch`` axis: under an active
+    ``dist.sharding`` ruleset (the fleet serving path, see
+    ``repro.sim.serving``) the UE batch shards over the mesh's data axis
+    while the weights — whose template axes are all ``None`` — stay
+    replicated. Outside a ruleset every ``constrain`` is the identity, so
+    training and CPU tests run this code unchanged.
+    """
+    kpms = constrain(kpms.astype(F32), ("batch", None, None))
+    iq = constrain(iq.astype(F32), ("batch", None, None, None))
+    alloc = constrain(alloc.astype(F32), ("batch",))
+    v_t = lstm_branch(params["lstm"], kpms)
+    v_s = cnn_branch(params["cnn"], iq,
                      dropout_rate=e.dropout if train else 0.0, key=key)
-    w = jnp.clip(alloc.astype(F32), 0.0, 1.0)[:, None]
-    fused = w * v_t + (1.0 - w) * v_s
+    w = jnp.clip(alloc, 0.0, 1.0)[:, None]
+    fused = constrain(w * v_t + (1.0 - w) * v_s, ("batch", "embed"))
     h = jax.nn.relu(fused @ params["head"]["w1"] + params["head"]["b1"])
     out = h @ params["head"]["w2"] + params["head"]["b2"]
-    return out[:, 0]
+    return constrain(out[:, 0], ("batch",))

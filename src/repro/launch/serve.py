@@ -7,8 +7,15 @@ point, and reports the boundary traffic per codec. This is deliverable (e)'s
 split-serving mode: two runtimes + an explicit inter-pod link, exactly how
 a disaggregated deployment runs.
 
+--fleet-estimator N: instead AOT-lowers the mesh-sharded fleet estimator
+serving program (``repro.sim.serving``) for an N-UE report period on the
+single-pod production mesh (``--ep`` swaps in the expert-parallel
+``data x expert x model`` variant) and reports the batch sharding, UEs
+per chip, and compiled memory footprint.
+
 Usage:
   python -m repro.launch.serve --dry-run --arch granite-8b --split 18
+  python -m repro.launch.serve --fleet-estimator 4096 [--ep]
 """
 import os
 
@@ -37,6 +44,45 @@ def pod_submesh(mesh, pod: int) -> Mesh:
     return Mesh(mesh.devices[pod], ("data", "model"))
 
 
+def fleet_estimator_dryrun(n_ues: int, ep: bool) -> None:
+    """Lower + compile one mesh-sharded estimator report period (AOT)."""
+    from repro.estimator.model import EstimatorConfig, estimator_template
+    from repro.models import template as T
+    from repro.sim.serving import ServingMesh, serving_program
+
+    e = EstimatorConfig()
+    mesh = make_production_mesh(ep=ep)
+    serving = ServingMesh(mesh)
+    fn = serving_program(e, serving)
+    pabs = T.abstract_from_template(estimator_template(e))
+    kpms = jax.ShapeDtypeStruct((n_ues, e.window, e.n_kpms), jnp.float32)
+    iq = jax.ShapeDtypeStruct((n_ues, 2, e.n_sc, e.n_sym), jnp.float32)
+    alloc = jax.ShapeDtypeStruct((n_ues,), jnp.float32)
+    compiled = compile_lowered(fn.lower(pabs, kpms, iq, alloc))
+    # resolve the batch sharding the program actually gets: a fleet size
+    # not divisible by the data axes falls back to replicated (Ruleset
+    # rule 2), and the report must say so rather than claim shards
+    rs = sh.Ruleset(mesh, dict(sh.DEFAULT_RULES))
+    entry = rs.spec(("batch", None, None), kpms.shape)[0]
+    axes = (() if entry is None else
+            (entry,) if isinstance(entry, str) else entry)
+    batch_shards = 1
+    for a in axes:
+        batch_shards *= mesh.shape[a]
+    print(json.dumps({
+        "mode": "fleet-estimator", "mesh": dict(mesh.shape),
+        "chips": mesh.size, "n_ues": n_ues,
+        "batch_sharded": batch_shards > 1,
+        "batch_shards": batch_shards,
+        "rows_per_shard": n_ues // batch_shards,
+        # with the batch replicated every chip computes the whole fleet,
+        # so the per-chip capacity accounting only holds when sharded
+        "ue_per_chip": (round(n_ues / mesh.size, 2) if batch_shards > 1
+                        else float(n_ues)),
+        "memory": str(compiled.memory_analysis()),
+    }, indent=1))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b")
@@ -46,7 +92,18 @@ def main():
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--codec", default="int8", choices=["fp16", "int8", "int4"])
     ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--fleet-estimator", type=int, default=0, metavar="N",
+                    help="AOT-lower the mesh-sharded fleet estimator "
+                    "serving program for an N-UE report period instead of "
+                    "the split-serving dry-run")
+    ap.add_argument("--ep", action="store_true",
+                    help="use the expert-parallel production mesh variant "
+                    "(data x expert x model) for --fleet-estimator")
     args = ap.parse_args()
+
+    if args.fleet_estimator:
+        fleet_estimator_dryrun(args.fleet_estimator, args.ep)
+        return
 
     cfg = get_config(args.arch)
     ks = lm_split_points(cfg)

@@ -71,7 +71,9 @@ def serve_overrides(cfg: ModelConfig, model_shards: int = 16) -> dict:
     """Serving sharding policy: replicate weights across 'data' (pure TP,
     no per-token FSDP all-gathers) whenever the bf16 weights fit one TP
     group's HBM; the MoE/90B giants keep 2D weight sharding (weight-gather
-    serving) until the EP-serving hillclimb."""
+    serving) on non-EP meshes. On an EP mesh (``make_production_mesh(
+    ep=True)``) the ``experts`` rule resolves and MoE expert weights shard
+    E-ways over 'expert' with no override needed."""
     out: dict = {}
     bf16_bytes = cfg.param_count() * 2
     if bf16_bytes / model_shards < 10e9:

@@ -8,11 +8,15 @@ from repro.sim.engine import (FleetResult, TP_CLIP_MBPS, estimate_fleet,
                               simulate_fleet_looped, split_metrics)
 from repro.sim.sched import (POLICIES, SchedulerConfig, SchedulerState,
                              cell_shares, scheduler_init, scheduler_step)
+from repro.sim.serving import (ServingMesh, make_serving_mesh,
+                               serving_program, sharded_fleet_estimate)
 
 __all__ = ["CellsResult", "FleetResult", "POLICIES", "SchedulerConfig",
-           "SchedulerState", "TP_CLIP_MBPS", "attach_ring",
+           "SchedulerState", "ServingMesh", "TP_CLIP_MBPS", "attach_ring",
            "build_cells_episode", "cell_load", "cell_shares",
            "coupled_interference_mw", "estimate_fleet", "handover_grid",
-           "jain_index", "ring_coupling", "run_controllers", "run_scheduled",
-           "scheduler_init", "scheduler_step", "simulate_cells",
-           "simulate_fleet", "simulate_fleet_looped", "split_metrics"]
+           "jain_index", "make_serving_mesh", "ring_coupling",
+           "run_controllers", "run_scheduled", "scheduler_init",
+           "scheduler_step", "serving_program", "sharded_fleet_estimate",
+           "simulate_cells", "simulate_fleet", "simulate_fleet_looped",
+           "split_metrics"]

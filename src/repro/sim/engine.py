@@ -39,6 +39,7 @@ from repro.core.profiles import SplitProfile
 from repro.core.pso import TP_CLIP_MBPS, LookupTable, StackedLookupTable
 from repro.estimator.train import predict
 from repro.sim.sched import SchedulerConfig, scheduler_init, scheduler_step
+from repro.sim.serving import ServingMesh, sharded_fleet_estimate
 
 
 @dataclasses.dataclass
@@ -153,10 +154,18 @@ def run_scheduled(tables: np.ndarray, est_tp: np.ndarray,
                   cfg: ControllerConfig, warm_split,
                   sched: SchedulerConfig, n_cells: int, cell_idx: np.ndarray,
                   rate_mbps: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """((N, T) splits, (N, T) PRB shares): scheduler + controllers in one
-    scan. ``cell_idx``: (N, T) cell of each UE per period (inter-cell
-    handover = the index changing mid-episode); ``rate_mbps``: (N, T) the
-    gNB's CQI view (full-grant achievable rate) driving the scheduler."""
+    """((N, T) int32 splits, (N, T) float PRB shares in [0, 1]): scheduler
+    + controllers in one scan.
+
+    ``tables``: (N, tp_max+1) stacked lookup rows; ``est_tp``: (N, T)
+    estimated full-grant throughput in Mbps (each controller consumes
+    ``est_tp * share``); ``cell_idx``: (N, T) cell of each UE per period
+    (inter-cell handover = the index changing mid-episode);
+    ``rate_mbps``: (N, T) the gNB's CQI view (full-grant achievable rate,
+    Mbps) driving the scheduler. This is the ``sched is not None`` arm of
+    ``simulate_fleet``; with ``sched=None`` the engine takes
+    ``run_controllers`` instead, whose program is bit-identical to PR 2.
+    """
     sweep = _sweep_fn(cfg.ewma_alpha, cfg.hysteresis_steps,
                       cfg.fallback_split, sched, int(n_cells))
     splits, shares = sweep(
@@ -166,10 +175,23 @@ def run_scheduled(tables: np.ndarray, est_tp: np.ndarray,
     return np.asarray(splits), np.asarray(shares)
 
 
-def estimate_fleet(episode: EpisodeBatch, estimator,
-                   tp_clip=TP_CLIP_MBPS) -> np.ndarray:
-    """(N, T) estimated throughput: ONE ``predict`` call per report period
-    covering the entire fleet (the AF's 0.1 s batch inference)."""
+def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
+                   *, serving: Optional[ServingMesh] = None) -> np.ndarray:
+    """(N, T) estimated throughput in Mbps, clipped into ``tp_clip``.
+
+    ONE estimator forward per 0.1 s report period covers the entire fleet
+    (the AF's batch inference): period ``t`` sees each UE's (WINDOW, 15)
+    KPM window ending just before ``t`` plus its (2, n_sc, 14) IQ
+    spectrogram, and the fused prediction is clipped into the PSO sweep
+    range (Mbps, default ``TP_CLIP_MBPS``).
+
+    ``estimator``: an ``(EstimatorConfig, params)`` pair. ``serving``: an
+    optional ``repro.sim.serving.ServingMesh``; when given, each period's
+    forward runs as the mesh-sharded SPMD program — UE batch sharded over
+    the mesh's data axis, weights replicated — instead of the
+    single-device ``predict`` path. Both paths compute the same per-UE
+    math; they are pinned allclose by ``tests/test_serving_mesh.py``.
+    """
     ecfg, params = estimator
     assert episode.iq is not None, (
         "estimator inference needs IQ spectrograms: generate the episode "
@@ -177,6 +199,9 @@ def estimate_fleet(episode: EpisodeBatch, estimator,
     n, t_steps = episode.n_ues, episode.n_steps
     wins = episode.kpm_windows(normalize=True).astype(np.float32)
     alloc = episode.alloc_ratio.astype(np.float32)
+    if serving is not None:
+        return sharded_fleet_estimate(ecfg, params, wins,
+                                      episode.iq, alloc, serving, tp_clip)
     zeros = np.zeros(n, np.float32)
     est = np.empty((n, t_steps))
     for t in range(t_steps):
@@ -189,6 +214,7 @@ def estimate_fleet(episode: EpisodeBatch, estimator,
 
 def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
                    cfg: ControllerConfig, *, warm_split=None, estimator=None,
+                   serving: Optional[ServingMesh] = None,
                    fixed_split: Optional[int] = None,
                    ue: DeviceProfile = UE_VM_2CORE,
                    server: DeviceProfile = EDGE_A40X2,
@@ -197,27 +223,41 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
                    n_cells: int = 1) -> FleetResult:
     """Vectorized fleet simulation (the production path).
 
+    Consumes an ``EpisodeBatch`` of N UEs over T report periods (0.1 s
+    each) and returns a ``FleetResult`` of (N, T) arrays: int32 split
+    decisions, throughputs in Mbps, E2E delay in seconds, dCor privacy
+    leakage in [0, 1], and per-inference UE energy in joules.
+
     ``table``: one ``LookupTable`` shared by the fleet or a
     ``StackedLookupTable`` with one row per UE. ``warm_split`` defaults to
     ``fixed_split`` (the AF streams reports before this window) or NO_SPLIT.
     ``estimator``: optional (EstimatorConfig, params); without it the
-    controllers see the ground-truth throughput. ``fixed_split`` also
-    attaches the fixed-policy baseline metrics as ``result.fixed``.
+    controllers see the ground-truth throughput. ``serving``: optional
+    ``repro.sim.serving.ServingMesh`` forwarded to ``estimate_fleet`` so
+    the per-period estimator inference runs mesh-sharded (ignored without
+    an ``estimator``). ``fixed_split`` also attaches the fixed-policy
+    baseline metrics as ``result.fixed``.
 
-    ``sched`` (default None — the hook is a strict no-op and this is the
-    PR-2 program, bit-for-bit): a ``SchedulerConfig`` puts a gNB PRB
+    ``sched`` (default None): a ``SchedulerConfig`` puts a gNB PRB
     scheduler inside the scan. ``cell_idx`` (N, T) assigns each UE to one
     of ``n_cells`` cells per period; every UE's throughput — the estimate
     its controller consumes and the ground truth its metrics are gathered
     at — is scaled by the PRB share the scheduler granted it (see
     ``repro.sim.cells`` for the orchestration layer).
+
+    Equivalence guarantee: with ``sched=None`` the scheduler hook is a
+    strict no-op — the traced program is the PR-2 engine unchanged, split
+    decisions are bit-identical and metrics float-identical to it (pinned
+    by ``tests/test_sim_cells.py`` and the ``cells/noop_equivalence``
+    benchmark record). Sharded serving does not weaken this: it changes
+    where the estimator forward runs, not the controller scan.
     """
     tables = (table.tables if isinstance(table, StackedLookupTable)
               else np.broadcast_to(table.table,
                                    (episode.n_ues, len(table.table))))
     true_tp = np.asarray(episode.tp_mbps, float)
-    est_tp = (estimate_fleet(episode, estimator) if estimator is not None
-              else true_tp)
+    est_tp = (estimate_fleet(episode, estimator, serving=serving)
+              if estimator is not None else true_tp)
     if warm_split is None:
         warm_split = cfg.fallback_split if fixed_split is None else fixed_split
     if sched is None:

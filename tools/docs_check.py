@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo markdown links (the `make docs-check` gate).
+
+Scans README.md, docs/**/*.md and every in-tree README for
+``[text](target)`` links and checks that each relative target resolves to
+a real file or directory. External links (http/https/mailto) and pure
+in-page anchors (#...) are skipped; a ``path#anchor`` target is checked
+for the path only (anchor validity is the renderer's problem, file
+existence is ours).
+
+Usage: python tools/docs_check.py [repo_root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — target may not contain spaces or parens in our docs
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: pathlib.Path) -> list[pathlib.Path]:
+    files = {root / "README.md"}
+    files.update((root / "docs").rglob("*.md"))
+    for sub in ("src", "benchmarks", "examples", "tests"):
+        files.update((root / sub).rglob("README.md"))
+    return sorted(f for f in files if f.is_file())
+
+
+def check_file(path: pathlib.Path, root: pathlib.Path) -> list[str]:
+    errors = []
+    text = path.read_text()
+    # strip fenced code blocks: ``](...)`` inside them is example syntax
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        base = root if rel.startswith("/") else path.parent
+        resolved = (base / rel.lstrip("/")).resolve()
+        if not resolved.exists():
+            errors.append(f"{path.relative_to(root)}: broken link -> "
+                          f"{target}")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else
+                        pathlib.Path(__file__).resolve().parents[1])
+    files = doc_files(root)
+    errors = [e for f in files for e in check_file(f, root)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"docs-check: {len(files)} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
