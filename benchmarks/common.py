@@ -32,6 +32,9 @@ def machine_config() -> dict:
 def write_json(path: str, extra: dict | None = None) -> None:
     """Dump every ``record()`` row plus :func:`machine_config` (and any
     sweep-specific ``extra``, e.g. the serving-mesh shape) to ``path``."""
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
     payload = {"config": machine_config(), **(extra or {}),
                "records": [{"name": n, "us_per_call": us, "derived": d}
                            for n, us, d in RESULTS]}

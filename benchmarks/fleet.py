@@ -28,9 +28,18 @@ two, and the sched=None bit-identical regression. ``--json PATH`` dumps
 every record plus the machine + mesh config for cross-machine BENCH_*
 comparison.
 
+With ``--online`` it runs the drift sweep (``repro.sim.online``): an
+estimator trained offline on a quiet scenario distribution serves a
+fleet whose every UE jumps to an unseen interference regime mid-episode
+(a scenario-*distribution* shift, not the usual quarter-fleet handover),
+frozen vs online-adapted. Reports pre/post-drift estimator RMSE for
+both, the fig6-style delay/energy/privacy means, the UE-steps/s overhead
+of the closed loop, and the online=None bit-identity regression.
+
 Run:  PYTHONPATH=src python benchmarks/fleet.py [--fast] [--sizes 1 64 1024]
       PYTHONPATH=src python benchmarks/fleet.py --cells 4 --policy pf
       PYTHONPATH=src python benchmarks/fleet.py --mesh 4x2 --fast
+      PYTHONPATH=src python benchmarks/fleet.py --online [--json out.json]
 Also exposed as ``run(state)`` for benchmarks/run.py.
 """
 from __future__ import annotations
@@ -59,10 +68,10 @@ if __package__ in (None, ""):  # `python benchmarks/fleet.py`
 from benchmarks import fig6_adaptive
 from benchmarks.common import FAST, record, write_json
 from repro.channel.scenarios import SCENARIOS, WINDOW, gen_episode_batch
-from repro.sim import (SchedulerConfig, attach_ring, build_cells_episode,
-                       estimate_fleet, handover_grid, make_serving_mesh,
-                       ring_coupling, simulate_cells, simulate_fleet,
-                       simulate_fleet_looped)
+from repro.sim import (DriftConfig, OnlineConfig, SchedulerConfig,
+                       attach_ring, build_cells_episode, estimate_fleet,
+                       handover_grid, make_serving_mesh, ring_coupling,
+                       simulate_cells, simulate_fleet, simulate_fleet_looped)
 from repro.sim.sched import POLICIES
 
 LOOP_REF_UES = 32  # the looped path is timed on a slice this big (its
@@ -310,6 +319,121 @@ def run_mesh(state: dict, mesh_spec: str, sizes=None,
     return ok_eq and ok_noop and ok_close
 
 
+DRIFT_PRE = ("none", "cci")  # the estimator's offline training world
+DRIFT_POST = ("jamming", "tdd")  # the unseen regime the fleet drifts into
+
+
+def drift_grid(n: int, T: int) -> np.ndarray:
+    """(N, T + WINDOW) scenario grid realising a distribution shift: every
+    UE starts inside the offline training distribution and jumps to an
+    unseen interference regime at mid-episode (unlike the fleet sweep's
+    quarter-fleet handover, the whole serving distribution moves)."""
+    # object dtype: a fixed-width '<U4' grid would truncate "jamming"
+    pre = np.asarray(DRIFT_PRE, object)[np.arange(n) % len(DRIFT_PRE)]
+    post = np.asarray(DRIFT_POST, object)[np.arange(n) % len(DRIFT_POST)]
+    grid = np.repeat(pre[:, None], T + WINDOW, axis=1)
+    grid[:, WINDOW + T // 2:] = post[:, None]
+    return grid
+
+
+def online_estimator(n_sc: int, steps: int):
+    """Estimator trained OFFLINE on the pre-drift distribution only — the
+    paper's train-once regime the drift sweep stresses (reduced widths
+    like ``mesh_estimator``: the sweep measures adaptation, not absolute
+    accuracy)."""
+    from repro.channel.scenarios import gen_dataset
+    from repro.estimator.model import EstimatorConfig
+    from repro.estimator.train import train_estimator
+    e = EstimatorConfig(n_sc=n_sc, lstm_hidden=32, hidden=32)
+    rng = np.random.default_rng(0)
+    tr = gen_dataset(120 if FAST else 240, rng, scenarios=DRIFT_PRE,
+                     episode_len=10, n_sc=n_sc)
+    params, _, _ = train_estimator(e, tr, steps=steps, batch=32, seed=0)
+    return e, params
+
+
+def _rmse(res, cols: slice) -> float:
+    err = res.est_tp[:, cols] - res.true_tp[:, cols]
+    return float(np.sqrt(np.mean(np.asarray(err, float) ** 2)))
+
+
+def online_cell(n: int, T: int, est, prof, table, cfg, fixed, t0) -> dict:
+    """One fleet size through the drift episode: frozen vs online-adapted
+    estimator, plus the online=None bit-identity pin."""
+    rng = np.random.default_rng(13)
+    ep = gen_episode_batch(drift_grid(n, T), T, rng, include_iq=True,
+                           n_sc=est[0].n_sc)
+    kw = dict(estimator=est, fixed_split=fixed)
+    simulate_fleet(ep, table, prof, cfg, **kw)  # warm the jits
+    t1 = time.perf_counter()
+    frozen = simulate_fleet(ep, table, prof, cfg, **kw)
+    dt_frz = time.perf_counter() - t1
+    # bit-identity: online=None must BE the PR 4 program
+    noop = simulate_fleet(ep, table, prof, cfg, online=None, **kw)
+    ok_noop = (np.array_equal(noop.splits, frozen.splits)
+               and np.array_equal(noop.est_tp, frozen.est_tp))
+    ocfg = OnlineConfig(
+        capacity=min(4 * n, 8192), batch=256, steps=25, lr=3e-3,
+        min_fill=min(n, 256),
+        drift=DriftConfig(alpha=0.5, calibrate_periods=4, ratio=1.5,
+                          patience=2, cooldown=2))
+    simulate_fleet(ep, table, prof, cfg, online=ocfg, **kw)  # warm the
+    # online programs too (ring scatter + burst step), so overhead_x
+    # compares steady-state serving, not compiler speed
+    t2 = time.perf_counter()
+    onl = simulate_fleet(ep, table, prof, cfg, online=ocfg, **kw)
+    dt_onl = time.perf_counter() - t2
+    pre, post = slice(0, T // 2), slice(T // 2, None)
+    out = {"n": n, "rate": n * T / dt_onl, "rate_frozen": n * T / dt_frz,
+           "overhead_x": dt_onl / dt_frz, "ok_noop": ok_noop,
+           "rmse_pre_frozen": _rmse(frozen, pre),
+           "rmse_post_frozen": _rmse(frozen, post),
+           "rmse_pre_online": _rmse(onl, pre),
+           "rmse_post_online": _rmse(onl, post),
+           "n_adaptations": onl.online.n_adaptations,
+           "train_steps": onl.online.train_steps}
+    out["beats_frozen"] = out["rmse_post_online"] < out["rmse_post_frozen"]
+    record(f"online/n{n}", t0,
+           f"ue_steps_per_sec={out['rate']:.0f};"
+           f"frozen_ue_steps_per_sec={out['rate_frozen']:.0f};"
+           f"overhead_x={out['overhead_x']:.2f};"
+           f"rmse_pre_frozen={out['rmse_pre_frozen']:.1f};"
+           f"rmse_post_frozen={out['rmse_post_frozen']:.1f};"
+           f"rmse_post_online={out['rmse_post_online']:.1f};"
+           f"n_adaptations={out['n_adaptations']};"
+           f"train_steps={out['train_steps']};"
+           f"delay_ms={onl.delay_s.mean()*1e3:.0f};"
+           f"energy_J={onl.energy_j.mean():.2f};"
+           f"privacy={onl.privacy.mean():.3f};"
+           f"beats_frozen={out['beats_frozen']};noop_identical={ok_noop}")
+    return out
+
+
+def run_online(state: dict, sizes=None, T: int | None = None) -> bool:
+    """The drift sweep: frozen vs drift-triggered online adaptation."""
+    t0 = time.time()
+    prof = state.get("vgg_profile")
+    if prof is None:
+        from repro.models.vgg import FULL, vgg_split_profile
+        prof = state["vgg_profile"] = vgg_split_profile(FULL)
+    table, cfg, fixed = fig6_adaptive.fig6_table(prof)
+    n_sc = 32 if FAST else 64
+    est = online_estimator(n_sc, steps=400 if FAST else 600)
+    sizes = sizes or ([256] if FAST else [1024])
+    T = T or (20 if FAST else 40)
+    cells = [online_cell(n, T, est, prof, table, cfg, fixed, t0)
+             for n in sizes]
+    state["online"] = cells
+    ok_noop = all(c["ok_noop"] for c in cells)
+    ok_beat = all(c["beats_frozen"] for c in cells)
+    ok_adapt = all(c["n_adaptations"] > 0 for c in cells)
+    record("online/claims", t0,
+           f"noop_identical={ok_noop};online_beats_frozen={ok_beat};"
+           f"adaptations_ran={ok_adapt};max_fleet={max(sizes)};"
+           f"drift={'/'.join(DRIFT_PRE)}->{'/'.join(DRIFT_POST)}")
+    return ok_noop and ok_beat and ok_adapt
+
+
 def run(state: dict, sizes=None, T: int | None = None) -> bool:
     t0 = time.time()
     prof = state.get("vgg_profile")
@@ -348,6 +472,9 @@ def main() -> int:
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="run the mesh-sharded estimator-serving sweep on "
                     "a DxM (data x model) or DxExM (x expert) host mesh")
+    ap.add_argument("--online", action="store_true",
+                    help="run the drift sweep: frozen vs drift-triggered "
+                    "online estimator adaptation (repro.sim.online)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write all records + machine/mesh config as "
                     "JSON (comparable across machines)")
@@ -363,6 +490,10 @@ def main() -> int:
         T = args.steps or (10 if (FAST or args.fast) else 30)
         ok = run_mesh(state, args.mesh, sizes=args.sizes, T=T)
         label = "mesh sweep"
+    elif args.online:
+        T = args.steps or (20 if (FAST or args.fast) else 40)
+        ok = run_online(state, sizes=args.sizes, T=T)
+        label = "online sweep"
     elif args.cells:
         sizes = args.sizes or ([64, 1024] if (FAST or args.fast)
                                else [64, 1024, 4096])
@@ -375,7 +506,8 @@ def main() -> int:
         ok = run(state, sizes=sizes, T=T)
         label = "fleet sweep"
     if args.json:
-        write_json(args.json, {"mesh": state.get("mesh"), "ok": ok})
+        write_json(args.json, {"mesh": state.get("mesh"),
+                               "online": state.get("online"), "ok": ok})
     print(f"# {label} {'OK' if ok else 'FAILED'}", flush=True)
     return 0 if ok else 1
 

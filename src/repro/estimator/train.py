@@ -1,4 +1,15 @@
-"""Training loop + metrics for the throughput estimator."""
+"""Training loop + metrics for the throughput estimator.
+
+Both training paths — the offline loop here and the online continual-
+learning trainer (``repro.sim.online``) — share one jitted step factory:
+:func:`make_indexed_step` keeps the full dataset (or replay buffer)
+device-resident and gathers each minibatch by index *inside* the compiled
+step, so the only per-step host->device traffic is a tiny ``(batch,)``
+index vector instead of the minibatch tensors themselves. The factory
+optionally traces under a ``dist.sharding`` deployment, which is how the
+online trainer gets its data-sharded batch / replicated params / psum'd
+grads for free.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -7,11 +18,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import sharding as sh
 from repro.estimator.model import (EstimatorConfig, estimator_forward,
                                    init_estimator)
 from repro.optim import AdamW
 
 F32 = jnp.float32
+
+# the four fields every estimator batch carries (gen_dataset also emits
+# "scenario", which is metadata, not a model input)
+BATCH_KEYS = ("kpms", "iq", "alloc", "tp")
 
 
 def r2_rmse(pred: np.ndarray, y: np.ndarray) -> tuple[float, float]:
@@ -21,19 +37,66 @@ def r2_rmse(pred: np.ndarray, y: np.ndarray) -> tuple[float, float]:
     return 1.0 - ss_res / ss_tot, float(np.sqrt(np.mean((pred - y) ** 2)))
 
 
+def estimator_loss(e: EstimatorConfig, params, batch, key=None):
+    """MSE (Mbps^2) of the training-mode forward on one minibatch."""
+    pred = estimator_forward(e, params, batch["kpms"], batch["iq"],
+                             batch["alloc"], train=True, key=key)
+    return jnp.mean((pred - batch["tp"]) ** 2)
+
+
 def make_train_step(e: EstimatorConfig, opt: AdamW):
+    """Explicit-minibatch AdamW step: the host hands the batch in.
+
+    Kept as the reference semantics for :func:`make_indexed_step` (same
+    loss, same update — the indexed path only moves the gather on-device);
+    ``tests/test_channel_estimator.py`` pins their loss trajectories equal.
+    """
     @jax.jit
     def step(params, opt_state, batch, key):
-        def loss_fn(p):
-            pred = estimator_forward(e, p, batch["kpms"], batch["iq"],
-                                     batch["alloc"], train=True, key=key)
-            return jnp.mean((pred - batch["tp"]) ** 2)
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
+        loss, grads = jax.value_and_grad(
+            lambda p: estimator_loss(e, p, batch, key))(params)
         params, opt_state, _ = opt.update(grads, opt_state, params)
         return params, opt_state, loss
 
     return step
+
+
+def make_indexed_step(e: EstimatorConfig, opt: AdamW, *, mesh=None,
+                      overrides=None):
+    """The shared offline/online step factory: gather-by-index inside jit.
+
+    Returns ``step(params, opt_state, data, idx, key) -> (params,
+    opt_state, loss)`` where ``data`` is the device-resident dataset (or
+    replay buffer contents) keyed by :data:`BATCH_KEYS` and ``idx`` a
+    ``(batch,)`` int32 row selection. The minibatch gather runs inside the
+    compiled program, so one step costs an index transfer, not a minibatch
+    copy — the fix for the offline loop's per-step host->device transfer.
+
+    ``mesh``/``overrides``: an optional ``dist.sharding`` deployment
+    entered inside the traced function (the online trainer's setting): the
+    gathered batch shards over the mesh's data axis through the
+    estimator's ``batch`` constrains, params stay replicated, and GSPMD
+    inserts the gradient all-reduce (psum) automatically — the sharded and
+    unsharded steps are numerically interchangeable (pinned allclose by
+    ``tests/test_sim_online.py``).
+    """
+    def _step(params, opt_state, data, idx, key):
+        batch = {k: jnp.take(data[k], idx, axis=0) for k in BATCH_KEYS}
+        loss, grads = jax.value_and_grad(
+            lambda p: estimator_loss(e, p, batch, key))(params)
+        params, opt_state, _ = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    if mesh is None:
+        return jax.jit(_step)
+    ov = dict(overrides or {})
+
+    @jax.jit
+    def sharded_step(params, opt_state, data, idx, key):
+        with sh.use_rules(mesh, ov):
+            return _step(params, opt_state, data, idx, key)
+
+    return sharded_step
 
 
 def train_estimator(e: EstimatorConfig, data: dict, *, steps: int = 300,
@@ -43,16 +106,18 @@ def train_estimator(e: EstimatorConfig, data: dict, *, steps: int = 300,
     params = init_estimator(e, key)
     opt = AdamW(lr=lr, weight_decay=1e-4, clip_norm=1.0)
     opt_state = opt.init(params)
-    step_fn = make_train_step(e, opt)
+    step_fn = make_indexed_step(e, opt)
     n = len(data["tp"])
     rng = np.random.default_rng(seed)
+    # the dataset goes to device ONCE; each step ships only the (batch,)
+    # index vector and gathers its minibatch inside the compiled step
+    data_dev = {k: jnp.asarray(data[k]) for k in BATCH_KEYS}
     history = []
     for i in range(steps):
         idx = rng.integers(0, n, batch)
-        mb = {k: jnp.asarray(v[idx]) for k, v in data.items()
-              if k in ("kpms", "iq", "alloc", "tp")}
         key, sub = jax.random.split(key)
-        params, opt_state, loss = step_fn(params, opt_state, mb, sub)
+        params, opt_state, loss = step_fn(params, opt_state, data_dev,
+                                          jnp.asarray(idx, jnp.int32), sub)
         if i % log_every == 0 or i == steps - 1:
             history.append((i, float(loss)))
     metrics = None
@@ -63,7 +128,9 @@ def train_estimator(e: EstimatorConfig, data: dict, *, steps: int = 300,
 
 
 @partial(jax.jit, static_argnums=0)
-def _fwd(e, params, kpms, iq, alloc):
+def fwd(e, params, kpms, iq, alloc):
+    """One jitted inference forward (shared by ``predict`` and the
+    unsharded per-period path of ``repro.sim.online``)."""
     return estimator_forward(e, params, kpms, iq, alloc)
 
 
@@ -78,7 +145,7 @@ def predict(e: EstimatorConfig, params, data: dict,
     n = len(data["tp"])
     batch = max(n, 1) if batch is None else batch
     for i in range(0, n, batch):
-        outs.append(np.asarray(_fwd(
+        outs.append(np.asarray(fwd(
             e, params, jnp.asarray(data["kpms"][i:i + batch]),
             jnp.asarray(data["iq"][i:i + batch]),
             jnp.asarray(data["alloc"][i:i + batch]))))

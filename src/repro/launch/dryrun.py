@@ -57,8 +57,9 @@ def run_cell(arch: str, shape: str, multi_pod: bool, remat: str,
         rec["grad_accum"] = cell.grad_accum
         mem = compiled.memory_analysis()
         rec["memory_analysis"] = str(mem)
+        from repro.launch.steps import cost_analysis_dict
         rec["cost_analysis"] = {
-            k: v for k, v in (compiled.cost_analysis() or {}).items()
+            k: v for k, v in cost_analysis_dict(compiled).items()
             if k in ("flops", "bytes accessed", "transcendentals")
         }
     costvec = None

@@ -121,7 +121,8 @@ def collective_stats(hlo_text: str, n_devices: int):
 
 # ------------------------------------------------------------------ calibration
 def _costvec(compiled, n_dev) -> dict:
-    ca = compiled.cost_analysis() or {}
+    from repro.launch.steps import cost_analysis_dict
+    ca = cost_analysis_dict(compiled)
     vec = {"flops": float(ca.get("flops", 0.0)),
            "bytes": float(ca.get("bytes accessed", 0.0))}
     stats = collective_stats(compiled.as_text(), n_dev)
@@ -225,7 +226,8 @@ def roofline(compiled, mesh, cfg, shape_name: str, shapes: dict,
         for k in stats:
             stats[k].count = int(costvec.get("count:" + k, 0))
     else:
-        ca = compiled.cost_analysis() or {}
+        from repro.launch.steps import cost_analysis_dict
+        ca = cost_analysis_dict(compiled)
         flops_dev = float(ca.get("flops", 0.0))
         bytes_dev = float(ca.get("bytes accessed", 0.0))
         stats = collective_stats(compiled.as_text(), n_dev)

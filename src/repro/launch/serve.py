@@ -13,9 +13,17 @@ single-pod production mesh (``--ep`` swaps in the expert-parallel
 ``data x expert x model`` variant) and reports the batch sharding, UEs
 per chip, and compiled memory footprint.
 
+--fleet-online N: AOT-lowers one online *adaptation* step
+(``repro.sim.online``: replay-buffer gather + estimator fwd/bwd + AdamW)
+against an N-row buffer on the production mesh — buffer rows sharded over
+the data axis, params/optimizer moments replicated — and reports the
+minibatch sharding, whether the gradient all-reduce (psum) made it into
+the program, and the compiled memory footprint.
+
 Usage:
   python -m repro.launch.serve --dry-run --arch granite-8b --split 18
   python -m repro.launch.serve --fleet-estimator 4096 [--ep]
+  python -m repro.launch.serve --fleet-online 65536 [--online-batch 4096]
 """
 import os
 
@@ -83,6 +91,61 @@ def fleet_estimator_dryrun(n_ues: int, ep: bool) -> None:
     }, indent=1))
 
 
+def fleet_online_dryrun(n_rows: int, batch: int, ep: bool) -> None:
+    """Lower + compile one mesh-sharded online adaptation step (AOT)."""
+    from repro.estimator.model import EstimatorConfig, estimator_template
+    from repro.estimator.train import make_indexed_step
+    from repro.models import template as T
+    from repro.optim import AdamW
+    from repro.sim.serving import ServingMesh
+
+    e = EstimatorConfig()
+    mesh = make_production_mesh(ep=ep)
+    serving = ServingMesh(mesh)
+    opt = AdamW(lr=1e-3, weight_decay=1e-4, clip_norm=1.0)
+    step = make_indexed_step(e, opt, mesh=mesh,
+                             overrides=serving.rule_overrides())
+    pabs = T.abstract_from_template(estimator_template(e))
+    opt_abs = jax.eval_shape(opt.init, pabs)
+    rs = sh.Ruleset(mesh, dict(sh.DEFAULT_RULES))
+
+    # buffer rows committed batch-sharded, like sim.online.buffer_init
+    def rows(shape):
+        return jax.ShapeDtypeStruct(
+            shape, jnp.float32,
+            sharding=rs.sharding(("batch",) + (None,) * (len(shape) - 1),
+                                 shape))
+    data = {"kpms": rows((n_rows, e.window, e.n_kpms)),
+            "iq": rows((n_rows, 2, e.n_sc, e.n_sym)),
+            "alloc": rows((n_rows,)), "tp": rows((n_rows,))}
+    idx = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    key_abs = jax.eval_shape(jax.random.PRNGKey, 0)
+    lowered = step.lower(pabs, opt_abs, data, idx, key_abs)
+    compiled = compile_lowered(lowered)
+    # the gradient psum is inserted by SPMD partitioning, so it only shows
+    # in the compiled (post-partitioning) HLO, not the lowering
+    try:
+        text = compiled.as_text()
+    except Exception:  # pragma: no cover - backend without HLO dump
+        text = ""
+    spec = rs.spec(("batch", None, None, None), data["iq"].shape)[0]
+    axes = (() if spec is None else
+            (spec,) if isinstance(spec, str) else spec)
+    shards = 1
+    for a in axes:
+        shards *= mesh.shape[a]
+    print(json.dumps({
+        "mode": "fleet-online", "mesh": dict(mesh.shape),
+        "chips": mesh.size, "buffer_rows": n_rows, "batch": batch,
+        "buffer_sharded": shards > 1, "buffer_shards": shards,
+        "rows_per_shard": n_rows // shards,
+        # the data-parallel gradient psum must be in the program, or the
+        # "sharded == unsharded" trainer contract is silently broken
+        "grads_psummed": ("all-reduce" in text or "all_reduce" in text),
+        "memory": str(compiled.memory_analysis()),
+    }, indent=1))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b")
@@ -96,13 +159,23 @@ def main():
                     help="AOT-lower the mesh-sharded fleet estimator "
                     "serving program for an N-UE report period instead of "
                     "the split-serving dry-run")
+    ap.add_argument("--fleet-online", type=int, default=0, metavar="N",
+                    help="AOT-lower one online adaptation step (buffer "
+                    "gather + fwd/bwd + AdamW) against an N-row replay "
+                    "buffer on the production mesh")
+    ap.add_argument("--online-batch", type=int, default=4096,
+                    help="minibatch rows for --fleet-online")
     ap.add_argument("--ep", action="store_true",
                     help="use the expert-parallel production mesh variant "
-                    "(data x expert x model) for --fleet-estimator")
+                    "(data x expert x model) for --fleet-estimator / "
+                    "--fleet-online")
     args = ap.parse_args()
 
     if args.fleet_estimator:
         fleet_estimator_dryrun(args.fleet_estimator, args.ep)
+        return
+    if args.fleet_online:
+        fleet_online_dryrun(args.fleet_online, args.online_batch, args.ep)
         return
 
     cfg = get_config(args.arch)

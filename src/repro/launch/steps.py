@@ -384,3 +384,15 @@ def compile_lowered(lowered):
                           "default passes", RuntimeWarning, stacklevel=2)
             _compiler_opts_ok = False
     return lowered.compile()
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to a flat dict.
+
+    Depending on the jax build the method returns a dict or a one-element
+    list of dicts (one per program); every dry-run consumer wants the
+    dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

@@ -55,6 +55,8 @@ class FleetResult:
     fixed: Optional["FleetResult"] = None  # fixed-split baseline, same shapes
     prb_share: Optional[np.ndarray] = None  # (N, T) gNB PRB grant, if
     # a scheduler ran; None on the default (uncontended) path
+    online: Optional[object] = None  # sim.online.OnlineStats when the run
+    # adapted the estimator online; None on the default (frozen) path
 
     @property
     def n_ues(self) -> int:
@@ -175,6 +177,26 @@ def run_scheduled(tables: np.ndarray, est_tp: np.ndarray,
     return np.asarray(splits), np.asarray(shares)
 
 
+def emit_period_samples(episode: EpisodeBatch, t: int,
+                        wins: Optional[np.ndarray] = None) -> dict:
+    """The (kpms, iq, alloc -> measured tp) sample batch report period
+    ``t`` emits: N rows of estimator inputs plus the period's *measured*
+    throughput in Mbps — the label the fleet observes for free after
+    acting, which is what the online replay buffer (``repro.sim.online``)
+    ingests and what ``estimate_fleet`` feeds the estimator (``predict``
+    only reads ``tp`` for its length).
+
+    ``wins``: optionally the precomputed float32
+    ``episode.kpm_windows(normalize=True)`` so per-period callers amortize
+    the window view across the episode."""
+    if wins is None:
+        wins = episode.kpm_windows(normalize=True).astype(np.float32)
+    return {"kpms": wins[:, t],
+            "iq": episode.iq[:, t].astype(np.float32),
+            "alloc": episode.alloc_ratio.astype(np.float32),
+            "tp": episode.tp_mbps[:, t].astype(np.float32)}
+
+
 def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
                    *, serving: Optional[ServingMesh] = None) -> np.ndarray:
     """(N, T) estimated throughput in Mbps, clipped into ``tp_clip``.
@@ -202,11 +224,9 @@ def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
     if serving is not None:
         return sharded_fleet_estimate(ecfg, params, wins,
                                       episode.iq, alloc, serving, tp_clip)
-    zeros = np.zeros(n, np.float32)
     est = np.empty((n, t_steps))
     for t in range(t_steps):
-        data = {"kpms": wins[:, t], "iq": episode.iq[:, t].astype(np.float32),
-                "alloc": alloc, "tp": zeros}
+        data = emit_period_samples(episode, t, wins)
         est[:, t] = np.clip(predict(ecfg, params, data, batch=None),
                             tp_clip[0], tp_clip[1])
     return est
@@ -215,6 +235,7 @@ def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
 def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
                    cfg: ControllerConfig, *, warm_split=None, estimator=None,
                    serving: Optional[ServingMesh] = None,
+                   online=None,
                    fixed_split: Optional[int] = None,
                    ue: DeviceProfile = UE_VM_2CORE,
                    server: DeviceProfile = EDGE_A40X2,
@@ -238,6 +259,16 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
     an ``estimator``). ``fixed_split`` also attaches the fixed-policy
     baseline metrics as ``result.fixed``.
 
+    ``online`` (default None): a ``repro.sim.online.OnlineConfig`` closes
+    the estimate->act->observe->learn loop — the per-report-period
+    estimator forward runs with *continually adapted* weights: each
+    period's measured throughput is ring-ingested as a free training
+    label, a drift monitor watches the estimator RMSE, and when it trips
+    the online trainer runs K jitted AdamW steps on the replay buffer
+    (under the serving mesh when one is given) before the next period's
+    predict. The resulting ``FleetResult.online`` carries the adaptation
+    trace (per-period RMSE, bursts, checkpoints). Requires ``estimator``.
+
     ``sched`` (default None): a ``SchedulerConfig`` puts a gNB PRB
     scheduler inside the scan. ``cell_idx`` (N, T) assigns each UE to one
     of ``n_cells`` cells per period; every UE's throughput — the estimate
@@ -250,14 +281,24 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
     decisions are bit-identical and metrics float-identical to it (pinned
     by ``tests/test_sim_cells.py`` and the ``cells/noop_equivalence``
     benchmark record). Sharded serving does not weaken this: it changes
-    where the estimator forward runs, not the controller scan.
+    where the estimator forward runs, not the controller scan. Likewise
+    ``online=None`` (the default) never touches ``repro.sim.online`` —
+    the estimates, splits and metrics are bit-identical to the PR 4
+    engine (pinned by ``tests/test_sim_online.py``).
     """
     tables = (table.tables if isinstance(table, StackedLookupTable)
               else np.broadcast_to(table.table,
                                    (episode.n_ues, len(table.table))))
     true_tp = np.asarray(episode.tp_mbps, float)
-    est_tp = (estimate_fleet(episode, estimator, serving=serving)
-              if estimator is not None else true_tp)
+    online_stats = None
+    if online is not None:
+        from repro.sim.online import online_estimate_fleet
+        assert estimator is not None, "online adaptation needs an estimator"
+        est_tp, online_stats = online_estimate_fleet(episode, estimator,
+                                                     online, serving=serving)
+    else:
+        est_tp = (estimate_fleet(episode, estimator, serving=serving)
+                  if estimator is not None else true_tp)
     if warm_split is None:
         warm_split = cfg.fallback_split if fixed_split is None else fixed_split
     if sched is None:
@@ -277,7 +318,7 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
         fixed = FleetResult(fsplits, true_tp, est_tp, fd, fp, fe,
                             prb_share=shares)
     return FleetResult(splits, true_tp, est_tp, delay, priv, energy, fixed,
-                       prb_share=shares)
+                       prb_share=shares, online=online_stats)
 
 
 def simulate_fleet_looped(episode: EpisodeBatch, table,

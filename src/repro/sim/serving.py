@@ -114,6 +114,20 @@ def serving_program(ecfg: EstimatorConfig, serving: ServingMesh):
     return fn
 
 
+def replicate_params(serving: ServingMesh, params):
+    """Estimator params device-put replicated onto the deployment's mesh.
+
+    This is also the whole weight-*refresh* path: ``serving_program``
+    caches the compiled per-period program on (config, deployment) and
+    takes the params as a runtime argument, so swapping adapted weights in
+    — the ``repro.sim.online`` trainer does this after every adaptation
+    burst — is one replicated ``device_put`` and a cache hit: no retrace,
+    no recompile (the refreshed tree has the same shapes, dtypes and
+    replicated sharding the program was compiled for).
+    """
+    return jax.device_put(params, NamedSharding(serving.mesh, P()))
+
+
 def sharded_fleet_estimate(ecfg: EstimatorConfig, params, wins: np.ndarray,
                            iq: np.ndarray, alloc: np.ndarray,
                            serving: ServingMesh, tp_clip) -> np.ndarray:
@@ -127,7 +141,7 @@ def sharded_fleet_estimate(ecfg: EstimatorConfig, params, wins: np.ndarray,
     """
     n, t_steps = wins.shape[0], wins.shape[1]
     fn = serving_program(ecfg, serving)
-    params_r = jax.device_put(params, NamedSharding(serving.mesh, P()))
+    params_r = replicate_params(serving, params)
     with sh.use_rules(serving.mesh, serving.rule_overrides()):
         alloc_d = sh.put(jnp.asarray(alloc, jnp.float32), ("batch",))
         est = np.empty((n, t_steps))
