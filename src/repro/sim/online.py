@@ -1,0 +1,368 @@
+"""Closed-loop online estimator adaptation: drift-triggered continual
+learning inside the fleet engine.
+
+The paper's estimator is trained once offline and served frozen; under
+the scenario/handover drift the fleet engine simulates, its error grows
+and split decisions degrade. This module closes the missing half of the
+serving loop — estimate -> act -> observe -> learn — at fleet scale,
+using labels the fleet already produces for free (the measured per-period
+throughput each report period emits):
+
+  * :class:`ReplayBuffer` — a device-resident, fixed-capacity pure-jnp
+    ring buffer of (kpms, iq, alloc -> measured tp) samples, row axis
+    carrying the logical ``batch`` axis so under a ``ServingMesh`` the
+    buffer itself is sharded over the mesh's data axis;
+  * :func:`drift_step` — an EWMA monitor of the per-period estimator RMSE
+    with a trigger threshold calibrated on the first healthy periods,
+    plus patience (consecutive above-threshold periods to fire) and
+    cooldown hysteresis so transient noise never triggers retraining;
+  * :func:`online_estimate_fleet` — the per-report-period loop: predict
+    with the current weights (the same cached ``sim.serving`` program an
+    AF pod runs), ingest the period's samples, update the monitor, and on
+    a trigger run K jitted AdamW steps on buffer minibatches — the step
+    comes from ``estimator.train.make_indexed_step``, shared with the
+    offline loop, traced under the serving mesh (data-sharded batch,
+    replicated params, psum'd grads) — then swap the refreshed weights
+    back into the serving cache (``serving.replicate_params``: a cache
+    hit, no retrace) and checkpoint them via
+    ``checkpoint.CheckpointManager``.
+
+``simulate_fleet(online=None)`` never enters this module: the engine's
+default path is bit-identical to the PR 4 program (pinned by
+``tests/test_sim_online.py``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.pso import TP_CLIP_MBPS
+from repro.dist import sharding as sh
+from repro.estimator.model import EstimatorConfig
+from repro.estimator.train import fwd, make_indexed_step
+from repro.optim import AdamW
+from repro.sim.serving import (ServingMesh, replicate_params,
+                               serving_program)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+# --------------------------------------------------------------- buffer
+class ReplayBuffer(NamedTuple):
+    """Fixed-capacity ring of fleet samples, all leaves device-resident.
+
+    Row 0..capacity-1 is the ring; ``head`` is the next write slot and
+    ``seen`` the total rows ever ingested (``min(seen, capacity)`` rows
+    are valid). The row axis is the logical ``batch`` axis: under a
+    serving mesh the buffer shards over the data axis like any fleet
+    batch."""
+
+    kpms: jax.Array  # (C, WINDOW, 15) normalized KPM windows
+    iq: jax.Array  # (C, 2, n_sc, 14) spectrograms
+    alloc: jax.Array  # (C,) PRB allocation ratios
+    tp: jax.Array  # (C,) measured throughput labels (Mbps)
+    head: jax.Array  # i32 scalar — next write slot
+    seen: jax.Array  # i32 scalar — total rows ever ingested
+
+    @property
+    def capacity(self) -> int:
+        return self.tp.shape[0]
+
+
+def buffer_init(capacity: int, e: EstimatorConfig,
+                serving: Optional[ServingMesh] = None) -> ReplayBuffer:
+    """An empty ring for ``capacity`` rows of this estimator's shapes.
+
+    With ``serving`` the sample arrays are committed row-sharded over the
+    mesh's data axis (``dist.sharding.put`` under the ``batch`` rule); on
+    a single device / no mesh they are plain device arrays."""
+    z = {"kpms": jnp.zeros((capacity, e.window, e.n_kpms), F32),
+         "iq": jnp.zeros((capacity, 2, e.n_sc, e.n_sym), F32),
+         "alloc": jnp.zeros((capacity,), F32),
+         "tp": jnp.zeros((capacity,), F32)}
+    if serving is not None:
+        with sh.use_rules(serving.mesh, serving.rule_overrides()):
+            z = {k: sh.put(v, ("batch",) + (None,) * (v.ndim - 1))
+                 for k, v in z.items()}
+    return ReplayBuffer(head=jnp.zeros((), I32), seen=jnp.zeros((), I32),
+                        **z)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _ring_scatter(buf: ReplayBuffer, kpms, iq, alloc, tp) -> ReplayBuffer:
+    # the buffer is donated: callers always rebind (buf = buffer_add(buf,
+    # ...)), so the .at[].set updates run in place instead of copying the
+    # whole capacity-sized ring every report period
+    cap = buf.tp.shape[0]
+    n = tp.shape[0]
+    idx = (buf.head + jnp.arange(n, dtype=I32)) % cap
+    return ReplayBuffer(
+        kpms=buf.kpms.at[idx].set(kpms),
+        iq=buf.iq.at[idx].set(iq),
+        alloc=buf.alloc.at[idx].set(alloc),
+        tp=buf.tp.at[idx].set(tp),
+        head=(buf.head + n) % cap,
+        seen=buf.seen + n)
+
+
+def buffer_add(buf: ReplayBuffer, kpms, iq, alloc, tp) -> ReplayBuffer:
+    """Ring-ingest a batch of N sample rows (oldest rows overwritten).
+
+    N > capacity keeps the newest ``capacity`` rows — the overflow is
+    dropped *before* the scatter so its indices stay unique (a scatter
+    with duplicate indices has no defined write order)."""
+    cap = int(buf.tp.shape[0])
+    n = int(np.shape(tp)[0])
+    if n > cap:
+        kpms, iq, alloc, tp = (x[-cap:] for x in (kpms, iq, alloc, tp))
+    return _ring_scatter(buf, jnp.asarray(kpms, F32), jnp.asarray(iq, F32),
+                         jnp.asarray(alloc, F32), jnp.asarray(tp, F32))
+
+
+def buffer_count(buf: ReplayBuffer) -> int:
+    """Valid rows in the ring (saturates at capacity)."""
+    return int(min(int(buf.seen), buf.capacity))
+
+
+def buffer_data(buf: ReplayBuffer) -> dict:
+    """The buffer as the dict ``make_indexed_step`` consumes."""
+    return {"kpms": buf.kpms, "iq": buf.iq, "alloc": buf.alloc,
+            "tp": buf.tp}
+
+
+# ---------------------------------------------------------- drift monitor
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    """EWMA drift monitor knobs (all units are Mbps of estimator RMSE)."""
+
+    alpha: float = 0.25  # EWMA weight of the newest per-period RMSE
+    calibrate_periods: int = 5  # healthy periods that set the baseline
+    ratio: float = 1.5  # trigger level = ratio * calibrated baseline
+    threshold_mbps: Optional[float] = None  # absolute override of ratio
+    patience: int = 2  # consecutive above-threshold periods to fire
+    cooldown: int = 3  # periods after a trigger before re-arming
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftState:
+    """Immutable monitor state; advance with :func:`drift_step`."""
+
+    rmse_ewma: float = 0.0
+    has_ewma: bool = False
+    baseline: float = 0.0  # running mean RMSE of the calibration periods
+    seen: int = 0  # periods consumed
+    above: int = 0  # consecutive periods above threshold
+    cooldown_left: int = 0
+    n_triggers: int = 0
+
+
+def drift_init() -> DriftState:
+    return DriftState()
+
+
+def drift_threshold(cfg: DriftConfig, state: DriftState) -> float:
+    """The trigger level in Mbps: absolute if configured, else the
+    calibrated ``ratio * baseline``."""
+    if cfg.threshold_mbps is not None:
+        return float(cfg.threshold_mbps)
+    return cfg.ratio * max(state.baseline, 1e-6)
+
+
+def drift_step(cfg: DriftConfig, state: DriftState, rmse_mbps: float,
+               armed: bool = True) -> tuple[DriftState, bool]:
+    """Feed one report period's estimator RMSE; returns (state, fired).
+
+    The first ``calibrate_periods`` periods only calibrate the baseline
+    (never fire). After that the EWMA must sit above the threshold for
+    ``patience`` consecutive periods to fire — one noisy period is not
+    drift — and a firing starts a ``cooldown`` during which the monitor is
+    disarmed (the freshly adapted model needs periods to show its RMSE).
+
+    ``armed=False`` means the caller cannot act on a trigger right now
+    (the online loop passes this while the replay buffer is below
+    ``min_fill``): the streak still builds but *holds* at ``patience``
+    instead of firing — no cooldown is started and no trigger is consumed
+    — so the first armed period with a held streak fires immediately."""
+    rmse = float(rmse_mbps)
+    a = cfg.alpha
+    ewma = rmse if not state.has_ewma else a * rmse + (1 - a) * state.rmse_ewma
+    seen = state.seen + 1
+    if seen <= cfg.calibrate_periods:
+        baseline = state.baseline + (rmse - state.baseline) / seen
+        return dataclasses.replace(state, rmse_ewma=ewma, has_ewma=True,
+                                   baseline=baseline, seen=seen), False
+    if state.cooldown_left > 0:
+        return dataclasses.replace(state, rmse_ewma=ewma, seen=seen,
+                                   above=0,
+                                   cooldown_left=state.cooldown_left - 1
+                                   ), False
+    above = state.above + 1 if ewma > drift_threshold(cfg, state) else 0
+    if above >= cfg.patience:
+        if not armed:  # hold the streak, don't consume the trigger
+            return dataclasses.replace(state, rmse_ewma=ewma, seen=seen,
+                                       above=cfg.patience), False
+        return dataclasses.replace(state, rmse_ewma=ewma, seen=seen, above=0,
+                                   cooldown_left=cfg.cooldown,
+                                   n_triggers=state.n_triggers + 1), True
+    return dataclasses.replace(state, rmse_ewma=ewma, seen=seen,
+                               above=above), False
+
+
+# --------------------------------------------------------- online trainer
+@dataclasses.dataclass(frozen=True)
+class OnlineConfig:
+    """Knobs of the closed adaptation loop (see docs/online.md)."""
+
+    capacity: int = 4096  # replay-buffer rows
+    batch: int = 256  # minibatch rows per adaptation step
+    steps: int = 20  # K jitted AdamW steps per trigger
+    lr: float = 1e-3
+    weight_decay: float = 1e-4
+    clip_norm: float = 1.0
+    min_fill: int = 256  # don't adapt before this many buffered rows
+    seed: int = 0  # minibatch sampling + dropout keys
+    drift: DriftConfig = DriftConfig()
+    ckpt_dir: Optional[str] = None  # CheckpointManager dir for adapted
+    # weights; None disables checkpointing
+    ckpt_keep: int = 3
+
+
+@dataclasses.dataclass
+class OnlineStats:
+    """Host-side trace of one online episode (``FleetResult.online``)."""
+
+    rmse: np.ndarray  # (T,) per-period estimator RMSE vs measured tp
+    adapted: np.ndarray  # (T,) bool — an adaptation burst ran after t
+    n_adaptations: int
+    train_steps: int  # total jitted steps across all bursts
+    train_loss: list  # mean minibatch loss per burst
+    buffer_fill: int  # valid rows at episode end
+    threshold_mbps: float  # the trigger level in effect at episode end
+    params: object  # final (possibly adapted) estimator params
+    ckpt_steps: list  # CheckpointManager steps written (empty without dir)
+
+
+@functools.lru_cache(maxsize=None)
+def online_step_program(ecfg: EstimatorConfig, opt: AdamW,
+                        serving: Optional[ServingMesh]):
+    """One compiled adaptation step per (estimator, optimizer, deployment)
+    — the shared ``make_indexed_step`` factory, traced under the serving
+    mesh when one is given so buffer minibatches shard over the data axis
+    and the gradient psum is in the program."""
+    if serving is None:
+        return make_indexed_step(ecfg, opt)
+    return make_indexed_step(ecfg, opt, mesh=serving.mesh,
+                             overrides=serving.rule_overrides())
+
+
+def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
+                          serving: Optional[ServingMesh] = None,
+                          tp_clip=TP_CLIP_MBPS
+                          ) -> tuple[np.ndarray, OnlineStats]:
+    """(N, T) Mbps estimates + :class:`OnlineStats`: the closed loop.
+
+    Per 0.1 s report period: (1) predict the whole fleet's throughput with
+    the *current* weights — the same per-period program ``sim.serving``
+    caches, so refreshed weights are a cache hit, never a retrace; (2)
+    observe the measured per-period throughput the engine emits
+    (``engine.emit_period_samples``) and ring-ingest the (kpms, iq, alloc
+    -> tp) rows; (3) feed the period RMSE to the drift monitor; (4) on a
+    trigger, run ``ocfg.steps`` jitted AdamW steps on buffer minibatches,
+    swap the updated weights into the serving path, and checkpoint them.
+
+    The estimates returned are exactly what the controllers consume
+    (clipped into ``tp_clip``); period t+1's estimate already reflects any
+    adaptation period t triggered. Split decisions never feed back into
+    the labels, so the engine can run its controller scan on the returned
+    array afterwards — ``simulate_fleet(online=...)`` does exactly that,
+    which keeps online composable with scheduling and fixed baselines.
+    """
+    from repro.sim.engine import emit_period_samples
+
+    ecfg, params = estimator
+    assert episode.iq is not None, (
+        "online adaptation needs IQ spectrograms: generate the episode "
+        "with include_iq=True")
+    n, t_steps = episode.n_ues, episode.n_steps
+    wins = episode.kpm_windows(normalize=True).astype(np.float32)
+    opt = AdamW(lr=ocfg.lr, weight_decay=ocfg.weight_decay,
+                clip_norm=ocfg.clip_norm)
+    opt_state = opt.init(params)
+    step_fn = online_step_program(ecfg, opt, serving)
+    if serving is not None:
+        predict_fn = serving_program(ecfg, serving)
+        params = replicate_params(serving, params)
+        ctx = sh.use_rules(serving.mesh, serving.rule_overrides())
+    else:
+        predict_fn = functools.partial(fwd, ecfg)
+        ctx = contextlib.nullcontext()
+    mgr = (CheckpointManager(ocfg.ckpt_dir, keep=ocfg.ckpt_keep)
+           if ocfg.ckpt_dir else None)
+    buf = buffer_init(ocfg.capacity, ecfg, serving=serving)
+    dstate = drift_init()
+    rng = np.random.default_rng(ocfg.seed)
+    key = jax.random.PRNGKey(ocfg.seed)
+    est = np.empty((n, t_steps))
+    rmse = np.empty(t_steps)
+    adapted = np.zeros(t_steps, bool)
+    train_loss: list = []
+    ckpt_steps: list = []
+    total_steps = 0
+    with ctx:
+        def place(x, axes):
+            return sh.put(jnp.asarray(x, F32), axes)
+
+        alloc_d = place(episode.alloc_ratio, ("batch",))
+        for t in range(t_steps):
+            s = emit_period_samples(episode, t, wins)
+            kpms_t = place(s["kpms"], ("batch", None, None))
+            iq_t = place(s["iq"], ("batch", None, None, None))
+            est[:, t] = np.clip(
+                np.asarray(predict_fn(params, kpms_t, iq_t, alloc_d)),
+                tp_clip[0], tp_clip[1])
+            tp_t = s["tp"]
+            rmse[t] = float(np.sqrt(np.mean((est[:, t] - tp_t) ** 2)))
+            buf = buffer_add(buf, kpms_t, iq_t, alloc_d,
+                             place(tp_t, ("batch",)))
+            fill = buffer_count(buf)
+            # below min_fill the monitor holds its streak instead of
+            # consuming the trigger: a drift detected before the buffer
+            # is ready fires on the first period it can be acted on
+            dstate, fired = drift_step(ocfg.drift, dstate, rmse[t],
+                                       armed=fill >= ocfg.min_fill)
+            if fired:
+                data = buffer_data(buf)
+                burst = []
+                for _ in range(ocfg.steps):
+                    idx = jnp.asarray(rng.integers(0, fill, ocfg.batch), I32)
+                    key, sub = jax.random.split(key)
+                    params, opt_state, loss = step_fn(params, opt_state,
+                                                      data, idx, sub)
+                    burst.append(float(loss))
+                if serving is not None:
+                    # weight refresh: re-commit replicated so the next
+                    # period's predict is a compiled-program cache hit
+                    params = replicate_params(serving, params)
+                total_steps += ocfg.steps
+                train_loss.append(float(np.mean(burst)))
+                adapted[t] = True
+                if mgr is not None:
+                    mgr.save(dstate.n_triggers, params)  # async
+                    ckpt_steps.append(dstate.n_triggers)
+    if mgr is not None:
+        mgr.wait()
+    stats = OnlineStats(rmse=rmse, adapted=adapted,
+                        n_adaptations=int(adapted.sum()),
+                        train_steps=total_steps, train_loss=train_loss,
+                        buffer_fill=buffer_count(buf),
+                        threshold_mbps=drift_threshold(ocfg.drift, dstate),
+                        params=params, ckpt_steps=ckpt_steps)
+    return est, stats
