@@ -5,13 +5,14 @@
 #   make cells      — multi-cell scheduler smoke (64 UEs x 2 cells x 3 policies)
 #   make mesh       — mesh-sharded estimator serving smoke (sharded == unsharded)
 #   make online     — online-adaptation drift smoke (adapted beats frozen)
+#   make churn      — slot-pool churn smoke (arrival/departure, no retraces)
 #   make dryrun     — AOT dry-run cell (1 arch x 1 shape on the 256-chip mesh)
 #   make docs-check — fail on broken intra-repo links in README/docs
 #   make ci         — what .github/workflows/ci.yml runs on push
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke fleet cells mesh online dryrun docs-check ci
+.PHONY: test smoke fleet cells mesh online churn dryrun docs-check ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -33,6 +34,10 @@ online:
 	$(PY) benchmarks/fleet.py --fast --online --sizes 128 --steps 20 \
 	  --json benchmarks/results/online_smoke.json
 
+churn:
+	$(PY) benchmarks/fleet.py --fast --churn \
+	  --json benchmarks/results/churn_smoke.json
+
 dryrun:
 	$(PY) -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k \
 	  --no-calibrate --force
@@ -40,4 +45,4 @@ dryrun:
 docs-check:
 	$(PY) tools/docs_check.py
 
-ci: test smoke fleet cells mesh online dryrun docs-check
+ci: test smoke fleet cells mesh online churn dryrun docs-check

@@ -28,6 +28,17 @@ two, and the sched=None bit-identical regression. ``--json PATH`` dumps
 every record plus the machine + mesh config for cross-machine BENCH_*
 comparison.
 
+With ``--churn`` it runs the slot-pool sweep (``repro.sim.pool``): a
+fixed-capacity pool of 1024–4096 UE slots serving a *continuously
+churning* population — Poisson arrivals with a diurnal tide, geometric
+dwell times, admission through fixed lanes — at 10–50% churn per report
+period. Reports sustained UE-steps/s (occupied-slot periods over wall
+clock), p99 admission latency in periods, mean occupancy, and a
+no-retrace assertion: after warmup the jitted per-period program must
+not recompile as the population churns (the whole point of the fixed
+shapes). Also pins the full-pool configuration (every session arrives at
+t=0 and never departs) bit-identical on splits to the batch engine.
+
 With ``--online`` it runs the drift sweep (``repro.sim.online``): an
 estimator trained offline on a quiet scenario distribution serves a
 fleet whose every UE jumps to an unseen interference regime mid-episode
@@ -40,6 +51,7 @@ Run:  PYTHONPATH=src python benchmarks/fleet.py [--fast] [--sizes 1 64 1024]
       PYTHONPATH=src python benchmarks/fleet.py --cells 4 --policy pf
       PYTHONPATH=src python benchmarks/fleet.py --mesh 4x2 --fast
       PYTHONPATH=src python benchmarks/fleet.py --online [--json out.json]
+      PYTHONPATH=src python benchmarks/fleet.py --churn [--sizes 1024 4096]
 Also exposed as ``run(state)`` for benchmarks/run.py.
 """
 from __future__ import annotations
@@ -67,11 +79,14 @@ if __package__ in (None, ""):  # `python benchmarks/fleet.py`
 
 from benchmarks import fig6_adaptive
 from benchmarks.common import FAST, record, write_json
-from repro.channel.scenarios import SCENARIOS, WINDOW, gen_episode_batch
+from repro.channel.scenarios import (SCENARIOS, WINDOW, ChurnConfig,
+                                     ChurnSchedule, gen_episode_batch,
+                                     make_churn_schedule)
 from repro.sim import (DriftConfig, OnlineConfig, SchedulerConfig,
                        attach_ring, build_cells_episode, estimate_fleet,
                        handover_grid, make_serving_mesh, ring_coupling,
                        simulate_cells, simulate_fleet, simulate_fleet_looped)
+from repro.sim.pool import pool_programs
 from repro.sim.sched import POLICIES
 
 LOOP_REF_UES = 32  # the looped path is timed on a slice this big (its
@@ -319,6 +334,115 @@ def run_mesh(state: dict, mesh_spec: str, sizes=None,
     return ok_eq and ok_noop and ok_close
 
 
+CHURN_OCCUPANCY = 0.85  # Little's-law occupancy target of the churn sweep
+
+
+def churn_sessions(schedule: ChurnSchedule, rng) -> object:
+    """One lean episode row per scheduled session (scenarios cycle S0-S3,
+    traces only as long as the longest dwell; KPM/IQ synthesis skipped —
+    the slot-pool sweep drives controllers on ground truth, and tens of
+    thousands of short sessions must not materialize gigabytes)."""
+    m = schedule.n_sessions
+    scen = np.asarray(SCENARIOS, object)[np.arange(m) % len(SCENARIOS)]
+    return gen_episode_batch(scen, schedule.max_dwell, rng,
+                             include_iq=False, include_kpms=False)
+
+
+def check_churn_full_pool(prof, table, cfg, fixed, t0) -> bool:
+    """The degenerate schedule (every session arrives at t=0, dwells the
+    whole horizon, capacity = sessions) through the slot pool must match
+    the batch engine: bit-identical splits, float-identical metrics — the
+    pool is a strict generalisation, not a parallel implementation."""
+    rng = np.random.default_rng(5)
+    n, T = 32, 20
+    grid, _ = scenario_grid(n, T, rng)
+    ep = gen_episode_batch(grid, T, rng, include_iq=False)
+    base = simulate_fleet(ep, table, prof, cfg, fixed_split=fixed)
+    schedule = ChurnSchedule(arrival_t=np.zeros(n, np.int32),
+                             dwell=np.full(n, T, np.int32),
+                             ready_end=np.full(T, n, np.int32),
+                             horizon=T, max_admits=n)
+    pool = simulate_fleet(ep, table, prof, cfg, churn=schedule, capacity=n,
+                          fixed_split=fixed)
+    splits_eq = (np.array_equal(base.splits, pool.splits)
+                 and bool(pool.active.all()))
+    mdev = max(float(np.abs(getattr(base, f) - getattr(pool, f)).max())
+               for f in ("true_tp", "est_tp", "delay_s", "privacy",
+                         "energy_j"))
+    ok = splits_eq and mdev < 1e-9
+    record("churn/full_pool_equivalence", t0,
+           f"splits_identical={splits_eq};metrics_max_absdev={mdev:.1e};"
+           f"ok={ok}")
+    return ok
+
+
+def churn_cell(n_slots: int, frac: float, T: int, prof, table, cfg, fixed,
+               rng, t0) -> dict:
+    """One (capacity, churn-fraction) point: ``frac * capacity`` UEs
+    arrive per period (diurnal tide on top), dwell times sized by Little's
+    law for ~``CHURN_OCCUPANCY`` steady-state occupancy."""
+    ccfg = ChurnConfig(arrival_rate=frac * n_slots,
+                       mean_dwell=max(1.0, CHURN_OCCUPANCY / frac),
+                       diurnal_amplitude=0.25, diurnal_period=T)
+    schedule = make_churn_schedule(ccfg, T, rng)
+    sessions = churn_sessions(schedule, rng)
+    kw = dict(churn=schedule, capacity=n_slots, fixed_split=fixed)
+    t_w = time.perf_counter()
+    simulate_fleet(sessions, table, prof, cfg, **kw)  # warm the pool jit
+    dt_warm = time.perf_counter() - t_w
+    sweep = pool_programs(cfg.ewma_alpha, cfg.hysteresis_steps,
+                          cfg.fallback_split, None, 1,
+                          int(schedule.max_admits)).sweep
+    n_traces = getattr(sweep, "_cache_size", lambda: None)()
+    t1 = time.perf_counter()
+    res = simulate_fleet(sessions, table, prof, cfg, **kw)
+    dt = time.perf_counter() - t1
+    if n_traces is not None:  # compile-count assertion: churn, no retrace
+        no_retrace = sweep._cache_size() == n_traces
+    else:  # jax without _cache_size: a retrace would re-pay compilation
+        no_retrace = dt < 0.5 * dt_warm
+    lc = res.lifecycle
+    rate = lc.ue_steps / dt
+    p99 = lc.p99_admit_latency()
+    occ = float(lc.occupancy.mean()) / n_slots
+    out = {"n_slots": n_slots, "churn_frac": frac, "rate": rate,
+           "p99_admit_periods": p99, "occupancy": occ,
+           "n_sessions": lc.n_sessions, "n_admitted": lc.n_admitted,
+           "no_retrace": bool(no_retrace)}
+    record(f"churn/s{n_slots}_f{int(round(frac * 100))}", t0,
+           f"ue_steps_per_sec={rate:.0f};p99_admit_latency_periods={p99:.1f};"
+           f"occupancy={occ:.2f};sessions={lc.n_sessions};"
+           f"admitted={lc.n_admitted};departed={int(lc.departed.sum())};"
+           f"no_retrace={bool(no_retrace)}")
+    return out
+
+
+def run_churn(state: dict, sizes=None, fracs=None,
+              T: int | None = None) -> bool:
+    """The slot-pool churn sweep + the full-pool equivalence pin."""
+    t0 = time.time()
+    prof = state.get("vgg_profile")
+    if prof is None:
+        from repro.models.vgg import FULL, vgg_split_profile
+        prof = state["vgg_profile"] = vgg_split_profile(FULL)
+    table, cfg, fixed = fig6_adaptive.fig6_table(prof)
+    sizes = sizes or ([256] if FAST else [1024, 4096])
+    fracs = fracs or ([0.1, 0.25] if FAST else [0.1, 0.25, 0.5])
+    T = T or (20 if FAST else 40)
+    ok_eq = check_churn_full_pool(prof, table, cfg, fixed, t0)
+    rng = np.random.default_rng(17)
+    cells = [churn_cell(s, f, T, prof, table, cfg, fixed, rng, t0)
+             for s in sizes for f in fracs]
+    state["churn"] = cells
+    ok_retrace = all(c["no_retrace"] for c in cells)
+    ok_occupied = all(c["occupancy"] > 0.3 for c in cells)
+    record("churn/claims", t0,
+           f"full_pool_equivalence={ok_eq};no_retrace={ok_retrace};"
+           f"occupancy_sane={ok_occupied};max_slots={max(sizes)};"
+           f"max_churn_frac={max(fracs)}")
+    return ok_eq and ok_retrace and ok_occupied
+
+
 DRIFT_PRE = ("none", "cci")  # the estimator's offline training world
 DRIFT_POST = ("jamming", "tdd")  # the unseen regime the fleet drifts into
 
@@ -475,6 +599,13 @@ def main() -> int:
     ap.add_argument("--online", action="store_true",
                     help="run the drift sweep: frozen vs drift-triggered "
                     "online estimator adaptation (repro.sim.online)")
+    ap.add_argument("--churn", action="store_true",
+                    help="run the slot-pool churn sweep: continuous UE "
+                    "arrival/departure through a fixed-capacity slot pool "
+                    "(repro.sim.pool); --sizes sets the pool capacities")
+    ap.add_argument("--churn-fracs", type=float, nargs="+", default=None,
+                    help="churn fractions (arrivals per period / capacity) "
+                    "for --churn (default 0.1 0.25 0.5)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write all records + machine/mesh config as "
                     "JSON (comparable across machines)")
@@ -494,6 +625,10 @@ def main() -> int:
         T = args.steps or (20 if (FAST or args.fast) else 40)
         ok = run_online(state, sizes=args.sizes, T=T)
         label = "online sweep"
+    elif args.churn:
+        T = args.steps or (20 if (FAST or args.fast) else 40)
+        ok = run_churn(state, sizes=args.sizes, fracs=args.churn_fracs, T=T)
+        label = "churn sweep"
     elif args.cells:
         sizes = args.sizes or ([64, 1024] if (FAST or args.fast)
                                else [64, 1024, 4096])
@@ -507,7 +642,8 @@ def main() -> int:
         label = "fleet sweep"
     if args.json:
         write_json(args.json, {"mesh": state.get("mesh"),
-                               "online": state.get("online"), "ok": ok})
+                               "online": state.get("online"),
+                               "churn": state.get("churn"), "ok": ok})
     print(f"# {label} {'OK' if ok else 'FAILED'}", flush=True)
     return 0 if ok else 1
 

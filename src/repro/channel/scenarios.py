@@ -87,7 +87,7 @@ class EpisodeBatch:
     scenario_idx: np.ndarray  # (N,) int
     alloc_ratio: np.ndarray  # (N,)
     int_dbm: np.ndarray  # (N, T + WINDOW)
-    kpms: np.ndarray  # (N, T + WINDOW, 15) raw (unnormalized) reports
+    kpms: np.ndarray | None  # (N, T + WINDOW, 15) raw reports, or None
     tp_mbps: np.ndarray  # (N, T) ground-truth labels
     iq: np.ndarray | None  # (N, T, 2, n_sc, 14) or None if not requested
 
@@ -102,6 +102,8 @@ class EpisodeBatch:
     def kpm_windows(self, normalize: bool = True) -> np.ndarray:
         """(N, T, WINDOW, 15) rolling estimator windows: step t sees the
         WINDOW reports strictly before trace position ``WINDOW + t``."""
+        if self.kpms is None:
+            raise ValueError("episode was generated with include_kpms=False")
         k = kpmmod.normalize_kpms(self.kpms) if normalize else self.kpms
         win = np.lib.stride_tricks.sliding_window_view(k, WINDOW, axis=1)
         return win.transpose(0, 1, 3, 2)[:, :self.n_steps]
@@ -109,7 +111,7 @@ class EpisodeBatch:
 
 def gen_episode_batch(scenarios, T: int, rng: np.random.Generator,
                       load_ratio=None, n_sc: int = iqmod.N_SC,
-                      include_iq: bool = True,
+                      include_iq: bool = True, include_kpms: bool = True,
                       int_dbm: np.ndarray | None = None,
                       extra_int_mw: np.ndarray | None = None) -> EpisodeBatch:
     """Generate N episodes in one vectorized pass.
@@ -131,7 +133,11 @@ def gen_episode_batch(scenarios, T: int, rng: np.random.Generator,
     interference floor (linear mW, e.g. neighbour-cell load x coupling
     from ``repro.sim.cells``) power-summed onto the traces before KPMs,
     IQ and labels are derived, so every downstream signal sees the
-    coupling.
+    coupling. ``include_kpms=False`` skips KPM-report synthesis
+    (``kpms`` is None) for callers that only need interference traces
+    and throughput labels — e.g. the slot-pool churn benchmark, where
+    tens of thousands of short sessions would otherwise materialize
+    gigabytes of unused reports.
     """
     scen = np.asarray(scenarios)
     scen_grid = scen if scen.ndim == 2 else None
@@ -155,9 +161,11 @@ def gen_episode_batch(scenarios, T: int, rng: np.random.Generator,
         assert tr.shape == (N, T + WINDOW), tr.shape
     if extra_int_mw is not None:
         tr = power_sum_dbm(tr, extra_int_mw)
-    kpms = kpmmod.kpm_window_batch(tr, lr, rng,
-                                   scen_grid if scen_grid is not None
-                                   else scen0)
+    kpms = None
+    if include_kpms:
+        kpms = kpmmod.kpm_window_batch(tr, lr, rng,
+                                       scen_grid if scen_grid is not None
+                                       else scen0)
     tp = tpmod.max_throughput_mbps(tr[:, WINDOW:])
     iq = None
     if include_iq:
@@ -209,3 +217,104 @@ def gen_dataset(n_per_scenario: int, rng: np.random.Generator,
             .astype(np.float32),
             "tp": ep.tp_mbps.reshape(n)[perm].astype(np.float32),
             "scenario": np.repeat(ep.scenario_idx, ep.n_steps)[perm]}
+
+
+# --------------------------------------------------------------------------
+# Continuous UE arrival/departure (slot-pool churn)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChurnConfig:
+    """Knobs for the continuous UE arrival/departure process.
+
+    Arrivals are Poisson per report period with an optional diurnal
+    (sinusoidal) modulation of the rate; session lengths are geometric
+    with mean ``mean_dwell`` periods, capped at ``max_dwell`` (which also
+    bounds the per-session trace length the engine must generate).
+    ``max_admits`` is the number of fixed admission lanes per period in
+    the jitted step — the admission *bandwidth*; arrivals beyond it (or
+    beyond free capacity) queue in the global FIFO and show up as
+    admission latency. Zero means "derive from the realised process".
+    """
+
+    arrival_rate: float = 8.0  # mean UE arrivals per report period
+    diurnal_amplitude: float = 0.0  # 0 = homogeneous Poisson, (0, 1] = tide
+    diurnal_period: int = 0  # periods per load cycle (0 -> one per horizon)
+    mean_dwell: float = 20.0  # mean session length in report periods
+    max_dwell: int = 0  # trace-length cap L (0 -> ceil(3 * mean_dwell))
+    max_admits: int = 0  # admission lanes A per period (0 -> auto)
+
+    def __post_init__(self):
+        if self.arrival_rate < 0:
+            raise ValueError(f"arrival_rate must be >= 0: {self.arrival_rate}")
+        if not 0.0 <= self.diurnal_amplitude <= 1.0:
+            raise ValueError(
+                f"diurnal_amplitude must be in [0, 1]: {self.diurnal_amplitude}")
+        if self.mean_dwell < 1.0:
+            raise ValueError(f"mean_dwell must be >= 1: {self.mean_dwell}")
+
+
+@dataclasses.dataclass
+class ChurnSchedule:
+    """A realised arrival process: the slot pool's global admission FIFO.
+
+    Sessions are sorted by arrival period; the engine admits them in
+    order as capacity frees up. ``ready_end[t]`` counts sessions with
+    ``arrival_t <= t`` — the FIFO prefix eligible for admission at
+    period t (precomputed host-side so the jitted step only compares
+    its running next-arrival pointer against a scalar).
+    """
+
+    arrival_t: np.ndarray  # (M,) int32, sorted arrival period per session
+    dwell: np.ndarray  # (M,) int32 session length in periods, >= 1
+    ready_end: np.ndarray  # (T,) int32 cumulative arrivals through period t
+    horizon: int  # T report periods
+    max_admits: int  # A admission lanes per period
+
+    @property
+    def n_sessions(self) -> int:
+        return int(self.arrival_t.shape[0])
+
+    @property
+    def max_dwell(self) -> int:
+        return int(self.dwell.max()) if self.dwell.size else 1
+
+
+def diurnal_arrival_rate(cfg: ChurnConfig, T: int) -> np.ndarray:
+    """(T,) per-period Poisson arrival rate with diurnal modulation."""
+    lam = np.full(T, float(cfg.arrival_rate))
+    if cfg.diurnal_amplitude > 0.0:
+        period = cfg.diurnal_period if cfg.diurnal_period > 0 else T
+        phase = 2.0 * np.pi * np.arange(T) / max(period, 1)
+        lam = lam * (1.0 + cfg.diurnal_amplitude * np.sin(phase))
+    return np.maximum(lam, 0.0)
+
+
+def make_churn_schedule(cfg: ChurnConfig, T: int,
+                        rng: np.random.Generator) -> ChurnSchedule:
+    """Draw a concrete arrival/departure realisation over T periods.
+
+    The auto ``max_admits`` is twice the busiest period's arrivals
+    (at least 1): wide enough that a drained pool catches up on a
+    backlog within a few periods, narrow enough to keep the fixed
+    admission lanes cheap.
+    """
+    lam = diurnal_arrival_rate(cfg, T)
+    counts = rng.poisson(lam).astype(np.int64)
+    arrival_t = np.repeat(np.arange(T, dtype=np.int32),
+                          counts).astype(np.int32)
+    m = int(arrival_t.shape[0])
+    max_dwell = cfg.max_dwell if cfg.max_dwell > 0 else int(
+        math.ceil(3.0 * cfg.mean_dwell))
+    max_dwell = max(max_dwell, 1)
+    if m:
+        dwell = rng.geometric(1.0 / float(cfg.mean_dwell), m)
+        dwell = np.clip(dwell, 1, max_dwell).astype(np.int32)
+    else:
+        dwell = np.zeros(0, np.int32)
+    ready_end = np.cumsum(counts).astype(np.int32)
+    max_admits = cfg.max_admits if cfg.max_admits > 0 else max(
+        1, 2 * int(counts.max(initial=0)))
+    return ChurnSchedule(arrival_t=arrival_t, dwell=dwell,
+                         ready_end=ready_end, horizon=int(T),
+                         max_admits=int(max_admits))

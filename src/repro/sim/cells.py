@@ -40,10 +40,19 @@ from repro.sim.engine import FleetResult, simulate_fleet
 from repro.sim.sched import SchedulerConfig
 
 
-def jain_index(x: np.ndarray) -> float:
+def jain_index(x: np.ndarray, active: np.ndarray | None = None) -> float:
     """Jain fairness of an allocation vector: 1 = perfectly even, 1/n =
-    one UE holds everything."""
+    one UE holds everything.
+
+    ``active``: optional bool mask selecting the slots that actually held
+    a UE — fairness must be counted over the live population only, or a
+    slot pool at 50% occupancy would look unfair purely from its empty
+    slots. An all-empty selection is vacuously fair (1.0)."""
     x = np.asarray(x, float)
+    if active is not None:
+        x = x[np.asarray(active, bool)]
+    if x.size == 0:
+        return 1.0
     s = float(x.sum())
     return s * s / (len(x) * float((x * x).sum()) + 1e-300)
 
@@ -187,7 +196,9 @@ def simulate_cells(episode: EpisodeBatch, cell_grid: np.ndarray, table,
     t_steps = episode.n_steps
     if grid.shape[1] == t_steps + WINDOW:
         grid = grid[:, WINDOW:]
-    assert grid.shape == (episode.n_ues, t_steps), grid.shape
+    if grid.shape != (episode.n_ues, t_steps):
+        raise ValueError(f"cell_grid shape {grid.shape} does not match "
+                         f"({episode.n_ues}, {t_steps}) or the full trace")
     if n_cells is None:
         n_cells = int(grid.max()) + 1
     fleet = simulate_fleet(episode, table, profile, cfg,

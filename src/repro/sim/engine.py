@@ -57,6 +57,11 @@ class FleetResult:
     # a scheduler ran; None on the default (uncontended) path
     online: Optional[object] = None  # sim.online.OnlineStats when the run
     # adapted the estimator online; None on the default (frozen) path
+    active: Optional[np.ndarray] = None  # (N, T) bool slot-occupancy mask
+    # when the run churned (rows are pool slots, not fixed UEs); None on
+    # the batch-synchronous path, where every (u, t) cell is live
+    lifecycle: Optional[object] = None  # sim.pool.LifecycleStats when the
+    # run churned (admissions, departures, admission latency); else None
 
     @property
     def n_ues(self) -> int:
@@ -78,6 +83,14 @@ class FleetResult:
         return out
 
 
+# Transmission-delay guard: an idle slot or a zero-PRB grant has no link,
+# and dividing by its 0 bps would poison delay means with inf. Any real
+# link is floored far above this (``throughput.max_throughput_mbps`` never
+# drops below 0.5 Mbps and PRB scaling below ``PRB_FLOOR_MBPS`` = 0.01
+# Mbps = 1e4 bps), so clamping at 1 bps is bit-invisible to live traffic.
+TP_FLOOR_BPS = 1.0
+
+
 def split_metrics(profile: SplitProfile, splits: np.ndarray,
                   tp_mbps: np.ndarray, ue: DeviceProfile = UE_VM_2CORE,
                   server: DeviceProfile = EDGE_A40X2
@@ -85,9 +98,11 @@ def split_metrics(profile: SplitProfile, splits: np.ndarray,
     """(delay_s, privacy, energy_j) for a whole fleet in one gather.
 
     Element-for-element identical to ``evaluate(...)`` at the chosen split
-    (same operations in the same order, float64 throughout)."""
+    (same operations in the same order, float64 throughout). Throughput is
+    floored at ``TP_FLOOR_BPS`` so zero/near-zero rates yield huge-but-
+    finite delays instead of inf/NaN."""
     l = np.asarray(splits)
-    tp_bps = np.asarray(tp_mbps, float) * 1e6
+    tp_bps = np.maximum(np.asarray(tp_mbps, float) * 1e6, TP_FLOOR_BPS)
     delay = (profile.d_ue(ue)[l] + profile.d_ser(server)[l]
              + profile.data_bytes[l] * 8.0 / tp_bps)
     return delay, profile.privacy[l], profile.e_ue(ue)[l]
@@ -197,15 +212,26 @@ def emit_period_samples(episode: EpisodeBatch, t: int,
             "tp": episode.tp_mbps[:, t].astype(np.float32)}
 
 
+# Rows per fused estimator forward on the unsharded path: bounds the f32
+# activation working set (8192 rows of the default (2, 64, 14) IQ is
+# ~56 MB) while amortizing dispatch over many report periods per call.
+EST_CHUNK_ROWS = 8192
+
+
 def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
                    *, serving: Optional[ServingMesh] = None) -> np.ndarray:
     """(N, T) estimated throughput in Mbps, clipped into ``tp_clip``.
 
-    ONE estimator forward per 0.1 s report period covers the entire fleet
-    (the AF's batch inference): period ``t`` sees each UE's (WINDOW, 15)
-    KPM window ending just before ``t`` plus its (2, n_sc, 14) IQ
-    spectrogram, and the fused prediction is clipped into the PSO sweep
-    range (Mbps, default ``TP_CLIP_MBPS``).
+    Batched inference over the fleet (the AF's batch path): period ``t``
+    sees each UE's (WINDOW, 15) KPM window ending just before ``t`` plus
+    its (2, n_sc, 14) IQ spectrogram, and the fused prediction is clipped
+    into the PSO sweep range (Mbps, default ``TP_CLIP_MBPS``). The
+    unsharded path vectorizes *across report periods* too: as many whole
+    periods as fit in ``EST_CHUNK_ROWS`` rows are flattened into one
+    jitted forward (periods x fleet rows), so a T-period episode costs
+    ``ceil(N * T / EST_CHUNK_ROWS)`` dispatches instead of T — the numbers
+    are identical to the old per-period loop because the forward is
+    row-wise (pinned by ``tests/test_sim_fleet.py``).
 
     ``estimator``: an ``(EstimatorConfig, params)`` pair. ``serving``: an
     optional ``repro.sim.serving.ServingMesh``; when given, each period's
@@ -215,9 +241,10 @@ def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
     math; they are pinned allclose by ``tests/test_serving_mesh.py``.
     """
     ecfg, params = estimator
-    assert episode.iq is not None, (
-        "estimator inference needs IQ spectrograms: generate the episode "
-        "with include_iq=True")
+    if episode.iq is None:
+        raise ValueError(
+            "estimator inference needs IQ spectrograms: generate the episode "
+            "with include_iq=True")
     n, t_steps = episode.n_ues, episode.n_steps
     wins = episode.kpm_windows(normalize=True).astype(np.float32)
     alloc = episode.alloc_ratio.astype(np.float32)
@@ -225,11 +252,21 @@ def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
         return sharded_fleet_estimate(ecfg, params, wins,
                                       episode.iq, alloc, serving, tp_clip)
     est = np.empty((n, t_steps))
-    for t in range(t_steps):
-        data = emit_period_samples(episode, t, wins)
-        est[:, t] = np.clip(predict(ecfg, params, data, batch=None),
-                            tp_clip[0], tp_clip[1])
-    return est
+    periods = max(1, min(t_steps, EST_CHUNK_ROWS // max(n, 1)))
+    for t0 in range(0, t_steps, periods):
+        b = min(periods, t_steps - t0)
+        sl = slice(t0, t0 + b)
+        rows = n * b
+        # (N, b, ...) -> (N*b, ...): row (u * b + j) is UE u at period t0+j
+        data = {"kpms": np.ascontiguousarray(wins[:, sl]).reshape(
+                    rows, *wins.shape[2:]),
+                "iq": np.asarray(episode.iq[:, sl], np.float32).reshape(
+                    rows, *episode.iq.shape[2:]),
+                "alloc": np.repeat(alloc, b),
+                "tp": np.empty(rows, np.float32)}
+        est[:, sl] = np.asarray(
+            predict(ecfg, params, data, batch=None)).reshape(n, b)
+    return np.clip(est, tp_clip[0], tp_clip[1])
 
 
 def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
@@ -241,7 +278,8 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
                    server: DeviceProfile = EDGE_A40X2,
                    sched: Optional[SchedulerConfig] = None,
                    cell_idx: Optional[np.ndarray] = None,
-                   n_cells: int = 1) -> FleetResult:
+                   n_cells: int = 1,
+                   churn=None, capacity: Optional[int] = None) -> FleetResult:
     """Vectorized fleet simulation (the production path).
 
     Consumes an ``EpisodeBatch`` of N UEs over T report periods (0.1 s
@@ -276,6 +314,15 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
     at — is scaled by the PRB share the scheduler granted it (see
     ``repro.sim.cells`` for the orchestration layer).
 
+    ``churn`` (default None): a ``repro.channel.scenarios.ChurnSchedule``
+    switches the engine to the slot-pool path (``repro.sim.pool``): the
+    episode's N rows become *sessions* that arrive, live for their dwell,
+    and depart, served from a fixed ``capacity``-slot device-resident
+    pool. Rows of the result are then pool slots over time, with
+    ``result.active`` marking occupancy and ``result.lifecycle`` carrying
+    admission/departure stats; ``cell_idx`` is interpreted as a (N,)
+    per-session static cell attach.
+
     Equivalence guarantee: with ``sched=None`` the scheduler hook is a
     strict no-op — the traced program is the PR-2 engine unchanged, split
     decisions are bit-identical and metrics float-identical to it (pinned
@@ -284,8 +331,21 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
     where the estimator forward runs, not the controller scan. Likewise
     ``online=None`` (the default) never touches ``repro.sim.online`` —
     the estimates, splits and metrics are bit-identical to the PR 4
-    engine (pinned by ``tests/test_sim_online.py``).
+    engine (pinned by ``tests/test_sim_online.py``) — and ``churn=None``
+    (the default) never touches ``repro.sim.pool``: the batch-synchronous
+    path below is the PR 5 program unchanged (pinned by
+    ``tests/test_sim_pool.py``).
     """
+    if churn is not None:
+        from repro.sim.pool import simulate_pool
+        if capacity is None:
+            raise TypeError("churn=... needs an explicit capacity=N_slots")
+        return simulate_pool(episode, churn, table, profile, cfg,
+                             capacity=capacity, warm_split=warm_split,
+                             estimator=estimator, serving=serving,
+                             online=online, fixed_split=fixed_split,
+                             ue=ue, server=server, sched=sched,
+                             cell=cell_idx, n_cells=n_cells)
     tables = (table.tables if isinstance(table, StackedLookupTable)
               else np.broadcast_to(table.table,
                                    (episode.n_ues, len(table.table))))
@@ -293,7 +353,8 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
     online_stats = None
     if online is not None:
         from repro.sim.online import online_estimate_fleet
-        assert estimator is not None, "online adaptation needs an estimator"
+        if estimator is None:
+            raise ValueError("online adaptation needs an estimator")
         est_tp, online_stats = online_estimate_fleet(episode, estimator,
                                                      online, serving=serving)
     else:
@@ -305,7 +366,8 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
         splits, shares, eff_tp = (
             run_controllers(tables, est_tp, cfg, warm_split), None, true_tp)
     else:
-        assert cell_idx is not None, "a scheduler needs a (N, T) cell_idx"
+        if cell_idx is None:
+            raise ValueError("a scheduler needs a (N, T) cell_idx")
         splits, shares = run_scheduled(tables, est_tp, cfg, warm_split,
                                        sched, n_cells, cell_idx, true_tp)
         eff_tp = tpmod.prb_scaled_mbps(true_tp, shares)

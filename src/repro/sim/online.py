@@ -127,6 +127,50 @@ def buffer_add(buf: ReplayBuffer, kpms, iq, alloc, tp) -> ReplayBuffer:
                          jnp.asarray(alloc, F32), jnp.asarray(tp, F32))
 
 
+@functools.partial(jax.jit, donate_argnums=0)
+def _ring_scatter_masked(buf: ReplayBuffer, kpms, iq, alloc, tp,
+                         mask) -> ReplayBuffer:
+    # masked rows are packed to the front of the write (cumsum of the mask
+    # gives each valid row its offset from head) and the rest scattered to
+    # index ``cap`` which ``mode="drop"`` discards — fixed shapes, so the
+    # program never retraces as the live population churns
+    cap = buf.tp.shape[0]
+    m = mask.astype(I32)
+    k = m.sum()
+    pos = jnp.cumsum(m) - 1
+    idx = jnp.where(mask, (buf.head + pos) % cap, cap)
+    return ReplayBuffer(
+        kpms=buf.kpms.at[idx].set(kpms, mode="drop"),
+        iq=buf.iq.at[idx].set(iq, mode="drop"),
+        alloc=buf.alloc.at[idx].set(alloc, mode="drop"),
+        tp=buf.tp.at[idx].set(tp, mode="drop"),
+        head=(buf.head + k) % cap,
+        seen=buf.seen + k)
+
+
+def buffer_add_masked(buf: ReplayBuffer, kpms, iq, alloc, tp,
+                      mask) -> ReplayBuffer:
+    """Ring-ingest only the rows where ``mask`` is True (the slot-pool
+    path: a churning fleet must not train on empty slots' zero samples).
+
+    The write stays a fixed-shape scatter — invalid rows are dropped at
+    the scatter, not gathered on the host — so one compiled program
+    serves every occupancy level. Requires ``len(tp) <= capacity`` so the
+    in-bounds indices stay unique (a slot pool's capacity is bounded by
+    its replay ring's)."""
+    cap = int(buf.tp.shape[0])
+    n = int(np.shape(tp)[0])
+    if n > cap:
+        raise ValueError(
+            f"masked ingest of {n} slots exceeds ring capacity {cap}; "
+            "size OnlineConfig.capacity >= the slot-pool capacity")
+    return _ring_scatter_masked(buf, jnp.asarray(kpms, F32),
+                                jnp.asarray(iq, F32),
+                                jnp.asarray(alloc, F32),
+                                jnp.asarray(tp, F32),
+                                jnp.asarray(mask, bool))
+
+
 def buffer_count(buf: ReplayBuffer) -> int:
     """Valid rows in the ring (saturates at capacity)."""
     return int(min(int(buf.seen), buf.capacity))
@@ -288,9 +332,10 @@ def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
     from repro.sim.engine import emit_period_samples
 
     ecfg, params = estimator
-    assert episode.iq is not None, (
-        "online adaptation needs IQ spectrograms: generate the episode "
-        "with include_iq=True")
+    if episode.iq is None:
+        raise ValueError(
+            "online adaptation needs IQ spectrograms: generate the episode "
+            "with include_iq=True")
     n, t_steps = episode.n_ues, episode.n_steps
     wins = episode.kpm_windows(normalize=True).astype(np.float32)
     opt = AdamW(lr=ocfg.lr, weight_decay=ocfg.weight_decay,

@@ -45,8 +45,13 @@ class SchedulerConfig:
     eps: float = 1e-6  # floor for PF averages / empty-cell denominators
 
     def __post_init__(self):
-        assert self.policy in POLICIES, (
-            f"unknown policy {self.policy!r}; pick one of {POLICIES}")
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {self.policy!r}; pick one of {POLICIES}")
+        if self.n_prb <= 0:
+            raise ValueError(f"n_prb must be positive: {self.n_prb}")
+        if not 0.0 < self.pf_beta <= 1.0:
+            raise ValueError(f"pf_beta must be in (0, 1]: {self.pf_beta}")
 
 
 class SchedulerState(NamedTuple):
@@ -74,25 +79,50 @@ def cell_shares(weights, cell_idx, n_cells: int, eps: float = 1e-6):
 
 
 def scheduler_step(cfg: SchedulerConfig, n_cells: int, state: SchedulerState,
-                   cell_idx, rate_mbps) -> tuple[SchedulerState, jax.Array]:
+                   cell_idx, rate_mbps, active=None
+                   ) -> tuple[SchedulerState, jax.Array]:
     """Advance the whole fleet's scheduler by one report period.
 
     ``cell_idx``: (N,) i32 cell of each UE this period (handover = the
     index changing between periods); ``rate_mbps``: (N,) the gNB's CQI
     view — each UE's max achievable rate at a full grant. Returns the new
-    state and the (N,) PRB share granted to each UE."""
+    state and the (N,) PRB share granted to each UE.
+
+    ``active``: optional (N,) bool slot mask for the churn engine. Masked
+    rows get weight 0 and are redirected to a dummy segment ``n_cells``,
+    so empty slots never receive PRBs, never shape a cell's normalizer or
+    max-C/I winner, and their PF averages are held frozen (re-armed at
+    admission). ``active=None`` is exactly the original fixed-fleet step.
+    """
     r = jnp.asarray(rate_mbps, F32)
     cell_idx = jnp.asarray(cell_idx, I32)
-    if cfg.policy == "rr":
-        w = jnp.ones_like(r)
-    elif cfg.policy == "pf":
-        w = r / jnp.maximum(state.avg_tp, cfg.eps)
-    else:  # maxsinr (validated in __post_init__)
-        cmax = segment_max(r, cell_idx, num_segments=n_cells)
-        w = (r >= cmax[cell_idx]).astype(F32)
-    share = cell_shares(w, cell_idx, n_cells, cfg.eps)
     beta = F32(cfg.pf_beta)
+    if active is None:
+        if cfg.policy == "rr":
+            w = jnp.ones_like(r)
+        elif cfg.policy == "pf":
+            w = r / jnp.maximum(state.avg_tp, cfg.eps)
+        else:  # maxsinr (validated in __post_init__)
+            cmax = segment_max(r, cell_idx, num_segments=n_cells)
+            w = (r >= cmax[cell_idx]).astype(F32)
+        share = cell_shares(w, cell_idx, n_cells, cfg.eps)
+        new = SchedulerState(
+            avg_tp=(1 - beta) * state.avg_tp + beta * r * share,
+            step=state.step + 1)
+        return new, share
+    act = jnp.asarray(active, bool)
+    actf = act.astype(F32)
+    cell_m = jnp.where(act, cell_idx, n_cells)  # dummy segment for empties
+    if cfg.policy == "rr":
+        w = actf
+    elif cfg.policy == "pf":
+        w = actf * (r / jnp.maximum(state.avg_tp, cfg.eps))
+    else:  # maxsinr
+        cmax = segment_max(r, cell_m, num_segments=n_cells + 1)
+        w = ((r >= cmax[cell_m]) & act).astype(F32)
+    share = cell_shares(w, cell_m, n_cells + 1, cfg.eps)
     new = SchedulerState(
-        avg_tp=(1 - beta) * state.avg_tp + beta * r * share,
+        avg_tp=jnp.where(act, (1 - beta) * state.avg_tp + beta * r * share,
+                         state.avg_tp),
         step=state.step + 1)
     return new, share

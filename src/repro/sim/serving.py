@@ -26,6 +26,12 @@ reduction), pinned allclose by ``tests/test_serving_mesh.py`` and the
 (``estimate_fleet(..., serving=)``) therefore composes with
 ``simulate_fleet``/``run_scheduled`` without touching the sched=None
 bit-identical guarantee, which only concerns the controller scan.
+
+The slot-pool engine (``repro.sim.pool``) preserves this fixed-shape
+contract under churn: its batch axis is the pool's ``capacity`` slots,
+not the live population, so every per-period forward — frozen or online
+— reuses the same compiled serving program at any occupancy; arrivals
+and departures move the active mask, never the sharded shapes.
 """
 from __future__ import annotations
 

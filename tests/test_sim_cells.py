@@ -159,8 +159,13 @@ def test_policy_shapes():
 
 
 def test_unknown_policy_rejected():
-    with pytest.raises(AssertionError, match="unknown policy"):
+    # ValueError, not assert: config validation must survive python -O
+    with pytest.raises(ValueError, match="unknown policy"):
         SchedulerConfig(policy="edf")
+    with pytest.raises(ValueError, match="n_prb"):
+        SchedulerConfig(n_prb=0)
+    with pytest.raises(ValueError, match="pf_beta"):
+        SchedulerConfig(pf_beta=1.5)
 
 
 # ------------------------------------------------------- coupling layer

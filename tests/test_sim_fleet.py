@@ -304,9 +304,9 @@ def test_tp_clip_single_source():
     assert pso.TP_CLIP_MBPS == (1.0, tpm.PEAK_MBPS)
 
 
-def test_estimate_fleet_one_predict_per_period():
+def test_estimate_fleet_shapes_and_clip():
     """Batched estimator inference: (N, T) predictions, clipped into the
-    PSO sweep range, one forward per report period."""
+    PSO sweep range."""
     jax = pytest.importorskip("jax")
     from repro.estimator.model import EstimatorConfig, init_estimator
     from repro.sim import TP_CLIP_MBPS, estimate_fleet
@@ -318,3 +318,58 @@ def test_estimate_fleet_one_predict_per_period():
     est = estimate_fleet(ep, (e, params))
     assert est.shape == (2, 3)
     assert est.min() >= TP_CLIP_MBPS[0] and est.max() <= TP_CLIP_MBPS[1]
+
+
+def test_estimate_fleet_vectorized_matches_per_period_loop():
+    """The period-chunked forward (many whole report periods flattened
+    into one dispatch) must reproduce the old one-forward-per-period loop:
+    the estimator is row-wise, so only the batch packing changed."""
+    jax = pytest.importorskip("jax")
+    from repro.estimator.model import EstimatorConfig, init_estimator
+    from repro.estimator.train import predict
+    from repro.sim import TP_CLIP_MBPS, estimate_fleet
+    from repro.sim.engine import EST_CHUNK_ROWS
+    rng = np.random.default_rng(9)
+    e = EstimatorConfig(n_sc=N_SC_TEST, lstm_hidden=8, hidden=8)
+    params = init_estimator(e, jax.random.PRNGKey(1))
+    n, T = 3, 7
+    scen = np.asarray(sc.SCENARIOS)[np.arange(n) % 4]
+    ep = sc.gen_episode_batch(scen, T, rng, n_sc=N_SC_TEST)
+    assert n * T <= EST_CHUNK_ROWS  # whole episode fits one chunk
+    est = estimate_fleet(ep, (e, params))
+    # reference: the pre-vectorization loop, one forward per period
+    wins = ep.kpm_windows(normalize=True).astype(np.float32)
+    alloc = ep.alloc_ratio.astype(np.float32)
+    ref = np.empty((n, T))
+    for t in range(T):
+        data = {"kpms": wins[:, t], "iq": ep.iq[:, t].astype(np.float32),
+                "alloc": alloc, "tp": np.empty(n, np.float32)}
+        ref[:, t] = np.asarray(predict(e, params, data, batch=None))
+    ref = np.clip(ref, TP_CLIP_MBPS[0], TP_CLIP_MBPS[1])
+    np.testing.assert_allclose(est, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_split_metrics_zero_throughput_finite():
+    """Zero / near-zero throughput (an empty slot, a starved PRB grant)
+    must yield huge-but-finite delay, never inf/NaN — and the floor must
+    be invisible at any real operating point (>= the 0.01 Mbps PRB
+    floor)."""
+    from repro.sim import split_metrics
+    from repro.sim.engine import TP_FLOOR_BPS
+    prof = vgg_split_profile(FULL)
+    splits = np.arange(len(prof.data_bytes))[None]
+    zero = np.zeros_like(splits, float)
+    delay, priv, energy = split_metrics(prof, splits, zero)
+    assert np.isfinite(delay).all() and (delay > 0).all()
+    assert np.isfinite(priv).all() and np.isfinite(energy).all()
+    # the floored delay is exactly the transfer at TP_FLOOR_BPS
+    expect = (prof.d_ue(UE_VM_2CORE)[splits] + prof.d_ser(EDGE_A40X2)[splits]
+              + prof.data_bytes[splits] * 8.0 / TP_FLOOR_BPS)
+    np.testing.assert_array_equal(delay, expect)
+    # bit-unchanged for any live throughput: the smallest rate the PRB
+    # scheduler can grant (0.01 Mbps = 1e4 bps) is far above the floor
+    tp = np.full_like(splits, 0.01, dtype=float)
+    d_floor, _, _ = split_metrics(prof, splits, tp)
+    ref = (prof.d_ue(UE_VM_2CORE)[splits] + prof.d_ser(EDGE_A40X2)[splits]
+           + prof.data_bytes[splits] * 8.0 / (0.01 * 1e6))
+    np.testing.assert_array_equal(d_floor, ref)

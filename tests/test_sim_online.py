@@ -357,7 +357,8 @@ def test_simulate_fleet_online_hook():
     tables = np.broadcast_to(table.table, (ep.n_ues, len(table.table)))
     np.testing.assert_array_equal(
         res.splits, run_controllers(tables, res.est_tp, cfg, 3))
-    with pytest.raises(AssertionError, match="needs an estimator"):
+    # ValueError, not assert: the guard must survive python -O
+    with pytest.raises(ValueError, match="needs an estimator"):
         simulate_fleet(ep, table, prof, cfg, online=ocfg)
 
 

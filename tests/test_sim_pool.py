@@ -1,0 +1,434 @@
+"""Slot-pool engine tests: pool invariants (no double-assigned slot,
+free-list conservation, masked PRB conservation), the churn-disabled
+bit-identity pin against the batch engine, full-pool equivalence, the
+scan-vs-stepwise equality, lifecycle accounting, and the online
+composition. Property tests run through hypothesis when available,
+otherwise a fixed-seed sweep of the same checks (the suite's standard
+pattern)."""
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.channel import scenarios as sc
+from repro.core.controller import ControllerConfig
+from repro.core.energy import EDGE_A40X2, UE_VM_2CORE
+from repro.core.objective import Constraints, Weights
+from repro.core.pso import NO_SPLIT, pso_vectorized
+from repro.models.vgg import FULL, vgg_split_profile
+from repro.sim import (POLICIES, SchedulerConfig, scheduler_init,
+                       scheduler_step, simulate_fleet, simulate_pool)
+from repro.sim.pool import PoolState, pool_init, pool_programs
+
+I32 = jnp.int32
+
+
+@pytest.fixture(scope="module")
+def prof_table_cfg():
+    prof = vgg_split_profile(FULL)
+    cons = Constraints(rho_max=0.92, tau_max_s=6.0, e_max_j=40.0)
+    table = pso_vectorized(prof, UE_VM_2CORE, EDGE_A40X2,
+                           Weights(1.0, 0.15, 0.1), cons, 130)
+    cfg = ControllerConfig(ewma_alpha=0.6, hysteresis_steps=2,
+                           fallback_split=int(table.query(130.0)))
+    return prof, table, cfg
+
+
+def _schedule(rng, T, rate, dwell, max_dwell):
+    ccfg = sc.ChurnConfig(arrival_rate=rate, mean_dwell=dwell,
+                          max_dwell=max_dwell)
+    schedule = sc.make_churn_schedule(ccfg, T, rng)
+    if schedule.n_sessions == 0:  # pragma: no cover - rate keeps M > 0
+        pytest.skip("empty arrival realisation")
+    return schedule
+
+
+def _sessions(rng, schedule):
+    scen = np.asarray(sc.SCENARIOS)[
+        np.arange(schedule.n_sessions) % len(sc.SCENARIOS)]
+    return sc.gen_episode_batch(scen, schedule.max_dwell, rng,
+                                include_iq=False, include_kpms=False)
+
+
+def _full_pool_schedule(n, T):
+    """Every session arrives at t=0 and dwells the whole horizon."""
+    return sc.ChurnSchedule(arrival_t=np.zeros(n, np.int32),
+                            dwell=np.full(n, T, np.int32),
+                            ready_end=np.full(T, n, np.int32),
+                            horizon=T, max_admits=n)
+
+
+# ------------------------------------------------------- pool invariants
+def _drive_pool(seed, capacity, T=25, rate=3.0, dwell=4.0):
+    """Step the pool period by period through the jitted admit/serve
+    programs, checking the slot invariants after every sub-step."""
+    rng = np.random.default_rng(seed)
+    schedule = _schedule(rng, T, rate, dwell, max_dwell=8)
+    sessions = _sessions(rng, schedule)
+    true_d = jnp.asarray(np.asarray(sessions.tp_mbps, np.float32))
+    m = schedule.n_sessions
+    tables_d = jnp.asarray(
+        np.zeros((1, 131), np.int32))  # all-NO_SPLIT shared row
+    cell_d = jnp.zeros(m, I32)
+    dwell_d = jnp.asarray(schedule.dwell, I32)
+    arrival_d = jnp.asarray(schedule.arrival_t, I32)
+    programs = pool_programs(0.5, 2, 3, None, 1, int(schedule.max_admits))
+    st = pool_init(capacity, warm_split=3)
+
+    def check(st: PoolState, where: str):
+        act = np.asarray(st.active)
+        free = np.asarray(st.free)
+        n_free = int(st.n_free)
+        # free-list conservation: every slot is active XOR on the stack
+        assert n_free + act.sum() == capacity, where
+        stack = free[:n_free]
+        assert len(np.unique(stack)) == n_free, f"{where}: stack dup"
+        assert not act[stack].any(), f"{where}: active slot on free stack"
+        # no double-assigned slot: live sids are unique
+        sids = np.asarray(st.sid)[act]
+        assert len(np.unique(sids)) == len(sids), f"{where}: sid dup"
+        return act, sids
+
+    admitted = set()
+    for t in range(T):
+        st, lat = programs.admit(st, jnp.asarray(t, I32),
+                                 jnp.asarray(int(schedule.ready_end[t]), I32),
+                                 arrival_d, jnp.asarray(3, I32))
+        act, sids = check(st, f"after admit t={t}")
+        lat = np.asarray(lat)
+        # admission lanes: valid lanes are a prefix, latencies non-negative
+        valid = lat >= 0
+        if valid.any():
+            assert valid[:valid.sum()].all()
+        # a session is admitted at most once, in FIFO order
+        for s in sids:
+            admitted.add(int(s))
+        assert int(st.next_arrival) == len(admitted)
+        assert int(st.next_arrival) <= int(schedule.ready_end[t])
+        st, ys = programs.serve_retire(st, tables_d,
+                                       jnp.zeros(capacity, jnp.float32),
+                                       true_d, cell_d, dwell_d)
+        check(st, f"after retire t={t}")
+        # ages of live sessions never exceed their dwell
+        act = np.asarray(st.active)
+        ages = np.asarray(st.age)[act]
+        dws = schedule.dwell[np.asarray(st.sid)[act]]
+        assert (ages < dws).all()
+
+
+def _check_masked_conservation(seed, policy):
+    """Masked scheduler_step: active slots' shares sum to 1 per non-empty
+    cell, inactive slots get exactly 0, and the active=None path is
+    untouched by the mask machinery (all-active mask matches it)."""
+    rng = np.random.default_rng(seed)
+    n, n_cells = 17, 3
+    cell_idx = np.concatenate([np.arange(n_cells),
+                               rng.integers(0, n_cells, n - n_cells)])
+    rate = rng.uniform(0.5, 130.0, n).astype(np.float32)
+    active = rng.random(n) < 0.6
+    cfg = SchedulerConfig(policy=policy)
+    state = scheduler_init(n)
+    _, share = scheduler_step(cfg, n_cells, state, cell_idx, rate,
+                              active=active)
+    share = np.asarray(share)
+    assert (share[~active] == 0.0).all()
+    assert (share >= 0.0).all() and (share <= 1.0 + 1e-6).all()
+    for c in range(n_cells):
+        m = active & (cell_idx == c)
+        if m.any():
+            assert share[m].sum() == pytest.approx(1.0, rel=1e-5)
+    # all-active mask == no mask (the fixed-fleet arm), down to float
+    s1, sh1 = scheduler_step(cfg, n_cells, state, cell_idx, rate)
+    s2, sh2 = scheduler_step(cfg, n_cells, state, cell_idx, rate,
+                             active=np.ones(n, bool))
+    np.testing.assert_allclose(np.asarray(sh2), np.asarray(sh1), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s2.avg_tp), np.asarray(s1.avg_tp),
+                               rtol=1e-6)
+
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.settings(max_examples=8, deadline=None)
+    @hypothesis.given(seed=st.integers(0, 10_000),
+                      capacity=st.integers(4, 24))
+    def test_pool_invariants(seed, capacity):
+        _drive_pool(seed, capacity)
+
+    @hypothesis.settings(max_examples=15, deadline=None)
+    @hypothesis.given(seed=st.integers(0, 10_000),
+                      policy=st.sampled_from(POLICIES))
+    def test_masked_prb_conservation(seed, policy):
+        _check_masked_conservation(seed, policy)
+else:
+    @pytest.mark.parametrize("seed,capacity", [(0, 4), (1, 9), (2, 16),
+                                               (3, 24)])
+    def test_pool_invariants(seed, capacity):
+        _drive_pool(seed, capacity)
+
+    @pytest.mark.parametrize("seed", range(4))
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_masked_prb_conservation(seed, policy):
+        _check_masked_conservation(seed, policy)
+
+
+def test_jain_index_masked():
+    """Fairness over the live population only: empty slots must not make
+    a half-occupied pool look unfair, and an empty pool is vacuously
+    fair."""
+    from repro.sim import jain_index
+    x = np.array([5.0, 0.0, 5.0, 0.0])
+    act = np.array([True, False, True, False])
+    assert jain_index(x) == pytest.approx(0.5)
+    assert jain_index(x, active=act) == pytest.approx(1.0)
+    assert jain_index(x, active=np.zeros(4, bool)) == 1.0
+    assert jain_index(x[act]) == jain_index(x, active=act)
+
+
+# --------------------------------------------------- equivalence pins
+def test_churn_disabled_bit_identity(prof_table_cfg):
+    """churn=None must BE the batch engine: the pool module is never
+    imported and splits/metrics come out of the exact same arrays."""
+    prof, table, cfg = prof_table_cfg
+    rng = np.random.default_rng(2)
+    scen = np.asarray(sc.SCENARIOS)[np.arange(8) % 4]
+    ep = sc.gen_episode_batch(scen, 12, rng, include_iq=False)
+    a = simulate_fleet(ep, table, prof, cfg, fixed_split=3)
+    b = simulate_fleet(ep, table, prof, cfg, fixed_split=3, churn=None)
+    np.testing.assert_array_equal(a.splits, b.splits)
+    for f in ("true_tp", "est_tp", "delay_s", "privacy", "energy_j"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    assert b.active is None and b.lifecycle is None
+
+
+@pytest.mark.parametrize("policy", [None, "rr", "pf", "maxsinr"])
+def test_full_pool_matches_batch_engine(prof_table_cfg, policy):
+    """Degenerate churn (all sessions at t=0, dwell = horizon, capacity =
+    sessions) through the pool == the batch engine: bit-identical splits,
+    float-identical metrics — for every scheduler policy."""
+    prof, table, cfg = prof_table_cfg
+    rng = np.random.default_rng(3)
+    n, T, n_cells = 8, 15, 3
+    scen = np.asarray(sc.SCENARIOS)[np.arange(n) % 4]
+    ep = sc.gen_episode_batch(scen, T, rng, include_iq=False)
+    schedule = _full_pool_schedule(n, T)
+    if policy is None:
+        base = simulate_fleet(ep, table, prof, cfg, fixed_split=3)
+        pool = simulate_fleet(ep, table, prof, cfg, fixed_split=3,
+                              churn=schedule, capacity=n)
+    else:
+        cell = np.arange(n) % n_cells
+        grid = np.repeat(cell[:, None], T, axis=1)
+        scfg = SchedulerConfig(policy, pf_beta=0.3)
+        base = simulate_fleet(ep, table, prof, cfg, sched=scfg,
+                              cell_idx=grid, n_cells=n_cells)
+        pool = simulate_fleet(ep, table, prof, cfg, sched=scfg,
+                              cell_idx=cell, n_cells=n_cells,
+                              churn=schedule, capacity=n)
+    assert pool.active.all()
+    np.testing.assert_array_equal(base.splits, pool.splits)
+    # PF shares can differ by 1 ULP (different XLA fusion of the masked
+    # weight product); every other policy is bit-identical in practice
+    for f in ("true_tp", "est_tp", "delay_s", "privacy", "energy_j"):
+        np.testing.assert_allclose(getattr(base, f), getattr(pool, f),
+                                   rtol=1e-5)
+    lc = pool.lifecycle
+    assert lc.n_admitted == n and (lc.admit_latency == 0).all()
+    assert (lc.occupancy == n).all()
+    assert lc.departed.sum() == n  # everyone retires at the horizon
+
+
+def test_pool_scan_matches_stepwise(prof_table_cfg):
+    """The fused scan sweep == the admit/serve_retire host loop, bit for
+    bit: the online path's driver is the same program, just unrolled."""
+    prof, table, cfg = prof_table_cfg
+    rng = np.random.default_rng(7)
+    T, capacity = 20, 8
+    schedule = _schedule(rng, T, rate=2.0, dwell=4.0, max_dwell=8)
+    sessions = _sessions(rng, schedule)
+    res = simulate_pool(sessions, schedule, table, prof, cfg,
+                        capacity=capacity)
+    programs = pool_programs(cfg.ewma_alpha, cfg.hysteresis_steps,
+                             cfg.fallback_split, None, 1,
+                             int(schedule.max_admits))
+    m = schedule.n_sessions
+    true_np = np.asarray(sessions.tp_mbps, np.float32)
+    true_d = jnp.asarray(true_np)
+    tables_d = jnp.asarray(np.broadcast_to(
+        table.table, (1, len(table.table))).astype(np.int32))
+    st = pool_init(capacity, warm_split=cfg.fallback_split)
+    splits, actives = [], []
+    for t in range(T):
+        st, _ = programs.admit(st, jnp.asarray(t, I32),
+                               jnp.asarray(int(schedule.ready_end[t]), I32),
+                               jnp.asarray(schedule.arrival_t, I32),
+                               jnp.asarray(cfg.fallback_split, I32))
+        # gather the frozen estimates exactly as the scan body does
+        sid = np.clip(np.asarray(st.sid), 0, m - 1)
+        age = np.clip(np.asarray(st.age), 0, sessions.n_steps - 1)
+        est_t = np.where(np.asarray(st.active), true_np[sid, age], 0.0)
+        st, ys = programs.serve_retire(st, tables_d,
+                                       jnp.asarray(est_t, jnp.float32),
+                                       true_d, jnp.zeros(m, I32),
+                                       jnp.asarray(schedule.dwell, I32))
+        actives.append(np.asarray(ys[0]))
+        splits.append(np.asarray(ys[3]))
+    np.testing.assert_array_equal(res.splits, np.stack(splits).T)
+    np.testing.assert_array_equal(res.active, np.stack(actives).T)
+
+
+def test_pool_lifecycle_accounting(prof_table_cfg):
+    """Admissions - departures = final occupancy; inactive cells carry
+    NaN metrics and NO_SPLIT; occupancy never exceeds capacity; admission
+    latency matches the FIFO backlog."""
+    prof, table, cfg = prof_table_cfg
+    rng = np.random.default_rng(11)
+    T, capacity = 30, 6
+    schedule = _schedule(rng, T, rate=4.0, dwell=6.0, max_dwell=10)
+    sessions = _sessions(rng, schedule)
+    res = simulate_pool(sessions, schedule, table, prof, cfg,
+                        capacity=capacity, fixed_split=3)
+    lc = res.lifecycle
+    assert (lc.occupancy <= capacity).all()
+    assert lc.n_admitted <= lc.n_sessions
+    assert lc.ue_steps == res.active.sum() == lc.occupancy.sum()
+    # occupancy[t] is snapshotted after period t's admissions but before
+    # its departures, so only departures from earlier periods are gone
+    dep_before = np.concatenate([[0], lc.departed[:-1].cumsum()])
+    assert (lc.admitted.cumsum() - dep_before == lc.occupancy).all()
+    assert (lc.admit_latency >= 0).all()
+    assert lc.admit_latency.shape == (lc.n_admitted,)
+    assert lc.p99_admit_latency() >= 0.0
+    act = res.active
+    assert np.isfinite(res.delay_s[act]).all()
+    assert np.isnan(res.delay_s[~act]).all()
+    assert (res.splits[~act] == NO_SPLIT).all()
+    assert (res.true_tp[~act] == 0.0).all()
+    assert np.isnan(res.fixed.delay_s[~act]).all()
+    # a saturated pool queues: with rate*dwell >> capacity some session
+    # must wait, and FIFO order means latencies are bounded by the horizon
+    assert (lc.admit_latency < T).all()
+
+
+def test_pool_online_composes(prof_table_cfg):
+    """The online arm drives the same slot pool (admission + masked
+    ingestion + serve) and produces the adaptation trace."""
+    from repro.estimator.model import EstimatorConfig, init_estimator
+    import jax
+
+    prof, table, cfg = prof_table_cfg
+    rng = np.random.default_rng(19)
+    T, capacity = 12, 6
+    schedule = _schedule(rng, T, rate=2.0, dwell=4.0, max_dwell=6)
+    scen = np.asarray(sc.SCENARIOS)[
+        np.arange(schedule.n_sessions) % len(sc.SCENARIOS)]
+    sessions = sc.gen_episode_batch(scen, schedule.max_dwell, rng,
+                                    include_iq=True, n_sc=16)
+    e = EstimatorConfig(n_sc=16, lstm_hidden=8, hidden=8)
+    params = init_estimator(e, jax.random.PRNGKey(0))
+    from repro.sim import DriftConfig, OnlineConfig
+    ocfg = OnlineConfig(capacity=64, batch=8, steps=2, min_fill=8,
+                        drift=DriftConfig(calibrate_periods=2,
+                                          threshold_mbps=0.0, patience=1,
+                                          cooldown=1))
+    res = simulate_fleet(sessions, table, prof, cfg, churn=schedule,
+                         capacity=capacity, estimator=(e, params),
+                         online=ocfg)
+    assert res.online is not None
+    assert res.online.rmse.shape == (T,)
+    assert res.online.n_adaptations > 0
+    assert res.active.shape == (capacity, T)
+    # estimates exist exactly on active cells (clipped >= 1 Mbps there)
+    assert (res.est_tp[~res.active] == 0.0).all()
+    assert (res.est_tp[res.active] >= 1.0).all()
+    # ring ingested only active-slot samples
+    assert res.online.buffer_fill <= min(64, int(res.active.sum()))
+
+
+def test_pool_online_needs_room_for_slots(prof_table_cfg):
+    """Masked ingestion requires ring capacity >= pool capacity."""
+    from repro.estimator.model import EstimatorConfig, init_estimator
+    import jax
+
+    prof, table, cfg = prof_table_cfg
+    rng = np.random.default_rng(23)
+    schedule = _schedule(rng, 8, rate=2.0, dwell=3.0, max_dwell=4)
+    scen = np.asarray(sc.SCENARIOS)[
+        np.arange(schedule.n_sessions) % len(sc.SCENARIOS)]
+    sessions = sc.gen_episode_batch(scen, schedule.max_dwell, rng,
+                                    include_iq=True, n_sc=16)
+    e = EstimatorConfig(n_sc=16, lstm_hidden=8, hidden=8)
+    params = init_estimator(e, jax.random.PRNGKey(0))
+    from repro.sim import OnlineConfig
+    with pytest.raises(ValueError, match="cover the pool"):
+        simulate_fleet(sessions, table, prof, cfg, churn=schedule,
+                       capacity=32, estimator=(e, params),
+                       online=OnlineConfig(capacity=16))
+
+
+# ----------------------------------------------------------- validation
+def test_pool_validation_raises(prof_table_cfg):
+    prof, table, cfg = prof_table_cfg
+    rng = np.random.default_rng(29)
+    schedule = _schedule(rng, 10, rate=2.0, dwell=3.0, max_dwell=5)
+    sessions = _sessions(rng, schedule)
+    with pytest.raises(TypeError, match="capacity"):
+        simulate_fleet(sessions, table, prof, cfg, churn=schedule)
+    with pytest.raises(ValueError, match="capacity"):
+        simulate_pool(sessions, schedule, table, prof, cfg, capacity=0)
+    bad = sc.gen_episode_batch(["none"] * (schedule.n_sessions + 1),
+                               schedule.max_dwell, rng,
+                               include_iq=False, include_kpms=False)
+    with pytest.raises(ValueError, match="session rows"):
+        simulate_pool(bad, schedule, table, prof, cfg, capacity=4)
+    with pytest.raises(ValueError, match="cell"):
+        simulate_pool(sessions, schedule, table, prof, cfg, capacity=4,
+                      sched=SchedulerConfig("rr"))
+    short = sc.gen_episode_batch(
+        ["none"] * schedule.n_sessions, max(schedule.max_dwell - 1, 1),
+        rng, include_iq=False, include_kpms=False)
+    if schedule.max_dwell > 1:
+        with pytest.raises(ValueError, match="dwell"):
+            simulate_pool(short, schedule, table, prof, cfg, capacity=4)
+    with pytest.raises(ValueError, match="needs an estimator"):
+        from repro.sim import OnlineConfig
+        simulate_pool(sessions, schedule, table, prof, cfg, capacity=4,
+                      online=OnlineConfig())
+
+
+def test_churn_config_validation():
+    with pytest.raises(ValueError, match="arrival_rate"):
+        sc.ChurnConfig(arrival_rate=-1.0)
+    with pytest.raises(ValueError, match="diurnal_amplitude"):
+        sc.ChurnConfig(diurnal_amplitude=2.0)
+    with pytest.raises(ValueError, match="mean_dwell"):
+        sc.ChurnConfig(mean_dwell=0.5)
+
+
+def test_diurnal_rate_modulation():
+    """The diurnal tide modulates the Poisson rate around the mean and
+    never goes negative."""
+    cfg = sc.ChurnConfig(arrival_rate=10.0, diurnal_amplitude=1.0,
+                         diurnal_period=20)
+    lam = sc.diurnal_arrival_rate(cfg, 40)
+    assert lam.shape == (40,)
+    assert (lam >= 0.0).all()
+    assert lam.max() == pytest.approx(20.0, rel=1e-6)
+    flat = sc.diurnal_arrival_rate(sc.ChurnConfig(arrival_rate=3.0), 10)
+    np.testing.assert_allclose(flat, 3.0)
+
+
+def test_lean_episode_generation():
+    """include_kpms=False skips report synthesis; the windows accessor
+    then refuses instead of crashing downstream."""
+    rng = np.random.default_rng(0)
+    ep = sc.gen_episode_batch(["none", "cci"], 5, rng, include_iq=False,
+                              include_kpms=False)
+    assert ep.kpms is None and ep.iq is None
+    assert ep.tp_mbps.shape == (2, 5)
+    with pytest.raises(ValueError, match="include_kpms"):
+        ep.kpm_windows()
