@@ -6,13 +6,14 @@
 #   make mesh       — mesh-sharded estimator serving smoke (sharded == unsharded)
 #   make online     — online-adaptation drift smoke (adapted beats frozen)
 #   make churn      — slot-pool churn smoke (arrival/departure, no retraces)
+#   make fused      — fused-path + int8 smoke (profile breakdown, allclose)
 #   make dryrun     — AOT dry-run cell (1 arch x 1 shape on the 256-chip mesh)
 #   make docs-check — fail on broken intra-repo links in README/docs
 #   make ci         — what .github/workflows/ci.yml runs on push
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke fleet cells mesh online churn dryrun docs-check ci
+.PHONY: test smoke fleet cells mesh online churn fused dryrun docs-check ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -38,6 +39,10 @@ churn:
 	$(PY) benchmarks/fleet.py --fast --churn \
 	  --json benchmarks/results/churn_smoke.json
 
+fused:
+	$(PY) benchmarks/fleet.py --fast --profile --sizes 256 --steps 10 \
+	  --json benchmarks/results/fused_smoke.json
+
 dryrun:
 	$(PY) -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k \
 	  --no-calibrate --force
@@ -45,4 +50,4 @@ dryrun:
 docs-check:
 	$(PY) tools/docs_check.py
 
-ci: test smoke fleet cells mesh online churn dryrun docs-check
+ci: test smoke fleet cells mesh online churn fused dryrun docs-check

@@ -39,6 +39,15 @@ not recompile as the population churns (the whole point of the fixed
 shapes). Also pins the full-pool configuration (every session arrives at
 t=0 and never departs) bit-identical on splits to the batch engine.
 
+With ``--profile`` it profiles the per-period fleet step: a per-stage
+wall-time breakdown (featurize / estimator forward / PSO query /
+scheduler scan / load coupling), each stage unfused vs fused through the
+``repro.kernels`` Pallas paths, the end-to-end engine before/after
+fusing (with an allclose pin), the int8 estimator forward next to fp32,
+and the slot-pool path at scale against the committed
+``benchmarks/results/churn_smoke.json`` baseline. All of it lands in the
+``--json`` record, so fusion targets and speedups are evidence.
+
 With ``--online`` it runs the drift sweep (``repro.sim.online``): an
 estimator trained offline on a quiet scenario distribution serves a
 fleet whose every UE jumps to an unseen interference regime mid-episode
@@ -52,6 +61,7 @@ Run:  PYTHONPATH=src python benchmarks/fleet.py [--fast] [--sizes 1 64 1024]
       PYTHONPATH=src python benchmarks/fleet.py --mesh 4x2 --fast
       PYTHONPATH=src python benchmarks/fleet.py --online [--json out.json]
       PYTHONPATH=src python benchmarks/fleet.py --churn [--sizes 1024 4096]
+      PYTHONPATH=src python benchmarks/fleet.py --profile [--json out.json]
 Also exposed as ``run(state)`` for benchmarks/run.py.
 """
 from __future__ import annotations
@@ -94,6 +104,17 @@ LOOP_REF_UES = 32  # the looped path is timed on a slice this big (its
 
 REPORT_PERIOD_S = 0.1  # the AF's estimator report period: serving a fleet
 # in real time means one whole-fleet predict within this budget
+
+
+def _vgg_profile(state: dict):
+    """The lazily-built VGG16 split profile, cached in the shared benchmark
+    ``state`` so every sweep (fleet/cells/mesh/online/churn/profile) builds
+    it at most once per process."""
+    prof = state.get("vgg_profile")
+    if prof is None:
+        from repro.models.vgg import FULL, vgg_split_profile
+        prof = state["vgg_profile"] = vgg_split_profile(FULL)
+    return prof
 
 
 def scenario_grid(n: int, T: int, rng: np.random.Generator,
@@ -231,10 +252,7 @@ def run_cells(state: dict, n_cells: int, policies=None, sizes=None,
               T: int | None = None) -> bool:
     """Per-policy multi-cell sweep + the no-op equivalence pin."""
     t0 = time.time()
-    prof = state.get("vgg_profile")
-    if prof is None:
-        from repro.models.vgg import FULL, vgg_split_profile
-        prof = state["vgg_profile"] = vgg_split_profile(FULL)
+    prof = _vgg_profile(state)
     table, cfg, fixed = fig6_adaptive.fig6_table(prof)
     policies = policies or list(POLICIES)
     sizes = sizes or [64, 1024]
@@ -268,6 +286,45 @@ def mesh_estimator():
     return e, init_estimator(e, jax.random.PRNGKey(0))
 
 
+def int8_table2_eval(est, rng, t0) -> dict:
+    """int8 vs fp32 estimator accuracy on a table2-style eval set (the
+    low-load regime ``benchmarks/table2_estimator.py`` evaluates in): the
+    RMSE the int8 weights give up, in Mbps. Served through the jnp oracle
+    form (bit-identical to the Pallas int8 kernels — integer accumulation
+    is exact — and far cheaper than interpret-mode kernels on CPU)."""
+    from repro.channel.scenarios import gen_dataset
+    from repro.estimator.serve import predict_int8, quantize_estimator
+    from repro.estimator.train import predict, r2_rmse
+    e, params = est
+    te = gen_dataset(8 if FAST else 24, rng, episode_len=6,
+                     low_load_only=True, n_sc=e.n_sc)
+    p32 = predict(e, params, te)
+    qparams = quantize_estimator(params, use_kernel=False)
+    p8 = predict_int8(e, qparams, te, use_kernel=False)
+    rmse32 = r2_rmse(p32, te["tp"])[1]
+    rmse8 = r2_rmse(p8, te["tp"])[1]
+    delta = abs(rmse8 - rmse32)
+    pred_dev = float(np.sqrt(np.mean((np.asarray(p8, float)
+                                      - np.asarray(p32, float)) ** 2)))
+    # weight footprint: int8 matrices + f32 rowwise scales vs f32 weights
+    import jax
+    f32_bytes = sum(x.size * x.dtype.itemsize
+                    for x in jax.tree_util.tree_leaves(params))
+    q_bytes = sum(x.size * x.dtype.itemsize
+                  for x in jax.tree_util.tree_leaves(qparams))
+    out = {"rmse_fp32": rmse32, "rmse_int8": rmse8,
+           "rmse_delta_mbps": delta, "pred_rmse_vs_fp32_mbps": pred_dev,
+           "weight_bytes_fp32": f32_bytes, "weight_bytes_int8": q_bytes,
+           "ok": delta < 1.0 and pred_dev < 1.0}
+    record("mesh/int8_table2", t0,
+           f"rmse_fp32={rmse32:.3f};rmse_int8={rmse8:.3f};"
+           f"rmse_delta_mbps={delta:.3f};"
+           f"pred_rmse_vs_fp32_mbps={pred_dev:.3f};"
+           f"weight_bytes_fp32={f32_bytes};weight_bytes_int8={q_bytes};"
+           f"ok={out['ok']}")
+    return out
+
+
 def mesh_sweep_cell(n: int, T: int, est, serving, rng, t0) -> dict:
     """One fleet size: unsharded vs mesh-sharded per-period inference."""
     grid, _ = scenario_grid(n, T, rng)
@@ -281,16 +338,35 @@ def mesh_sweep_cell(n: int, T: int, est, serving, rng, t0) -> dict:
     shd = estimate_fleet(ep, est, serving=serving)
     dt_shd = time.perf_counter() - t2
     close = bool(np.allclose(shd, base, rtol=1e-4, atol=1e-3))
+    # the int8 serving stack (fused featurize + quantized weights): same
+    # sharded per-period program, int8 LSTM/FC contractions
+    kw8 = dict(serving=serving, quant="int8", fused=True)
+    shd8 = estimate_fleet(ep, est, **kw8)  # warm
+    t3 = time.perf_counter()
+    shd8 = estimate_fleet(ep, est, **kw8)
+    dt_shd8 = time.perf_counter() - t3
+    # int8 weights vs fp32 weights on identical inputs: the quantization
+    # error seen by the controllers, in Mbps
+    int8_dev = float(np.sqrt(np.mean((np.asarray(shd8, float)
+                                      - np.asarray(shd, float)) ** 2)))
     # real-time capacity: UEs one chip sustains at one fleet predict per
     # REPORT_PERIOD_S (linear-in-N extrapolation from the measured period)
     cap_chip = n * (REPORT_PERIOD_S / (dt_shd / T)) / serving.n_chips
+    cap_chip8 = n * (REPORT_PERIOD_S / (dt_shd8 / T)) / serving.n_chips
     out = {"n": n, "rate": n * T / dt_shd, "rate_unsharded": n * T / dt_base,
-           "ue_capacity_per_chip": cap_chip, "allclose": close}
+           "ue_capacity_per_chip": cap_chip, "allclose": close,
+           "ue_capacity_per_chip_int8": cap_chip8,
+           "int8_capacity_ratio": cap_chip8 / cap_chip,
+           "int8_serving_rmse_mbps": int8_dev,
+           "int8_ok": int8_dev < 1.0}
     record(f"mesh/n{n}", t0,
            f"mesh={serving.describe()};chips={serving.n_chips};"
            f"ue_steps_per_sec={out['rate']:.0f};"
            f"unsharded_ue_steps_per_sec={out['rate_unsharded']:.0f};"
-           f"ue_capacity_per_chip={cap_chip:.0f};allclose={close}")
+           f"ue_capacity_per_chip={cap_chip:.0f};"
+           f"ue_capacity_per_chip_int8={cap_chip8:.0f};"
+           f"int8_capacity_ratio={cap_chip8 / cap_chip:.2f};"
+           f"int8_serving_rmse_mbps={int8_dev:.3f};allclose={close}")
     return out
 
 
@@ -298,10 +374,7 @@ def run_mesh(state: dict, mesh_spec: str, sizes=None,
              T: int | None = None) -> bool:
     """Estimator-serving sweep under a host mesh + the regression pins."""
     t0 = time.time()
-    prof = state.get("vgg_profile")
-    if prof is None:
-        from repro.models.vgg import FULL, vgg_split_profile
-        prof = state["vgg_profile"] = vgg_split_profile(FULL)
+    prof = _vgg_profile(state)
     table, cfg, fixed = fig6_adaptive.fig6_table(prof)
     # the serving path must not disturb either standing guarantee: engine
     # vs looped (fig6) and the sched=None bit-identical no-op pin
@@ -314,6 +387,8 @@ def run_mesh(state: dict, mesh_spec: str, sizes=None,
     rng = np.random.default_rng(7)
     cells = [mesh_sweep_cell(n, T, est, serving, rng, t0) for n in sizes]
     ok_close = all(c["allclose"] for c in cells)
+    ok_int8 = all(c["int8_ok"] for c in cells)
+    int8_eval = int8_table2_eval(est, rng, t0)
     # composition: the engine scan consuming the mesh-sharded estimates
     n0 = sizes[0]
     grid, _ = scenario_grid(n0, T, rng)
@@ -326,12 +401,13 @@ def run_mesh(state: dict, mesh_spec: str, sizes=None,
            f"energy_J={res.energy_j.mean():.2f};"
            f"privacy={res.privacy.mean():.3f}")
     state["mesh"] = {"spec": serving.describe(), "chips": serving.n_chips,
-                     "cells": cells}
+                     "cells": cells, "int8_table2": int8_eval}
     record("mesh/claims", t0,
            f"fig6_equivalence={ok_eq};sched_noop_identical={ok_noop};"
-           f"sharded_allclose={ok_close};mesh={serving.describe()};"
-           f"max_fleet={max(sizes)}")
-    return ok_eq and ok_noop and ok_close
+           f"sharded_allclose={ok_close};int8_rmse_pinned={ok_int8};"
+           f"int8_table2_delta_mbps={int8_eval['rmse_delta_mbps']:.3f};"
+           f"mesh={serving.describe()};max_fleet={max(sizes)}")
+    return ok_eq and ok_noop and ok_close and ok_int8 and int8_eval["ok"]
 
 
 CHURN_OCCUPANCY = 0.85  # Little's-law occupancy target of the churn sweep
@@ -421,10 +497,7 @@ def run_churn(state: dict, sizes=None, fracs=None,
               T: int | None = None) -> bool:
     """The slot-pool churn sweep + the full-pool equivalence pin."""
     t0 = time.time()
-    prof = state.get("vgg_profile")
-    if prof is None:
-        from repro.models.vgg import FULL, vgg_split_profile
-        prof = state["vgg_profile"] = vgg_split_profile(FULL)
+    prof = _vgg_profile(state)
     table, cfg, fixed = fig6_adaptive.fig6_table(prof)
     sizes = sizes or ([256] if FAST else [1024, 4096])
     fracs = fracs or ([0.1, 0.25] if FAST else [0.1, 0.25, 0.5])
@@ -441,6 +514,194 @@ def run_churn(state: dict, sizes=None, fracs=None,
            f"occupancy_sane={ok_occupied};max_slots={max(sizes)};"
            f"max_churn_frac={max(fracs)}")
     return ok_eq and ok_retrace and ok_occupied
+
+
+# --------------------------------------------------------------- profile
+def _best_of(fn, reps: int = 2) -> float:
+    """Best-of-``reps`` wall time of ``fn()``. Call once beforehand to warm
+    jit caches; best-of filters scheduler noise on small CI hosts."""
+    best = float("inf")
+    for _ in range(reps):
+        t = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t)
+    return best
+
+
+def profile_cell(n: int, T: int, est, prof, table, cfg, fixed, rng,
+                 t0) -> dict:
+    """Per-stage wall-time breakdown of the per-period fleet step at one
+    fleet size: featurize / estimator forward / PSO query (controller
+    scan) / scheduler scan / load coupling, each in its unfused (PR 6) and
+    fused (``repro.kernels``) form, plus the end-to-end estimator-driven
+    engine before/after fusing. The numbers are the evidence behind the
+    fusion targets — what dominates the 0.1 s report-period budget."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.channel import kpm as kpmmod
+    from repro.estimator.serve import fwd_int8, quantize_estimator
+    from repro.estimator.train import fwd
+    from repro.kernels.featurize import kpm_feature_windows
+    from repro.sim.cells import coupled_interference_mw
+    from repro.sim.engine import (EST_CHUNK_ROWS, run_controllers,
+                                  run_scheduled)
+
+    ecfg, params = est
+    grid, _ = scenario_grid(n, T, rng)
+    ep = gen_episode_batch(grid, T, rng, include_iq=True, n_sc=ecfg.n_sc)
+    stages: dict = {}
+
+    # featurize: the host stride-trick window materialization (a ~WINDOWx
+    # blowup of the trace) vs the fused device kernel on the same slab
+    def host_feat():
+        ep.kpm_windows(normalize=True).astype(np.float32)
+
+    kpms_d = jnp.asarray(ep.kpms, jnp.float32)
+    center = jnp.asarray(kpmmod.KPM_CENTER)
+    scale = jnp.asarray(kpmmod.KPM_SCALE)
+
+    def fused_feat():
+        jax.block_until_ready(
+            kpm_feature_windows(kpms_d, center, scale, WINDOW))
+
+    host_feat(), fused_feat()  # warm
+    stages["featurize_host"] = _best_of(host_feat)
+    stages["featurize_fused"] = _best_of(fused_feat)
+
+    # estimator forward: one EST_CHUNK_ROWS-row dispatch, fp32 vs int8
+    # (exactly the rows the engine's chunked estimate_fleet builds)
+    wins = ep.kpm_windows(normalize=True).astype(np.float32)
+    b = max(1, min(T, EST_CHUNK_ROWS // max(n, 1)))
+    kpms_rows = jnp.asarray(np.ascontiguousarray(wins[:, :b]).reshape(
+        n * b, *wins.shape[2:]))
+    iq_rows = jnp.asarray(np.asarray(ep.iq[:, :b], np.float32).reshape(
+        n * b, *ep.iq.shape[2:]))
+    alloc_rows = jnp.asarray(np.repeat(ep.alloc_ratio.astype(np.float32), b))
+    qparams = quantize_estimator(params, use_kernel=False)
+
+    def f32_fwd():
+        jax.block_until_ready(
+            fwd(ecfg, params, kpms_rows, iq_rows, alloc_rows))
+
+    def int8_fwd():  # oracle form: what compiles under a serving mesh
+        jax.block_until_ready(
+            fwd_int8(ecfg, qparams, kpms_rows, iq_rows, alloc_rows,
+                     use_kernel=False))
+
+    f32_fwd(), int8_fwd()
+    stages["estimator_fwd"] = _best_of(f32_fwd)
+    stages["estimator_fwd_int8"] = _best_of(int8_fwd)
+
+    # PSO query: the controller scan gathering each UE's lookup row
+    tables = np.broadcast_to(table.table, (n, len(table.table)))
+    est_tp = np.asarray(ep.tp_mbps, np.float32)
+    true_tp = np.asarray(ep.tp_mbps, float)
+
+    def pso():
+        run_controllers(tables, est_tp, cfg, fixed)
+
+    # scheduler scan (controllers + gNB PRB scheduler in one lax.scan):
+    # XLA scatter segment ops vs the fused segsum kernel
+    n_cells = 4
+    cell_idx = np.repeat((np.arange(n) % n_cells)[:, None], T, axis=1)
+
+    def sched(fused):
+        run_scheduled(tables, est_tp, cfg, fixed,
+                      SchedulerConfig("pf", fused=fused), n_cells,
+                      cell_idx, true_tp)
+
+    pso(), sched(False), sched(True)
+    stages["pso_query"] = _best_of(pso)
+    stages["sched_scan"] = _best_of(lambda: sched(False))
+    stages["sched_scan_fused"] = _best_of(lambda: sched(True))
+
+    # (C, C) load coupling: host one-hot reduction vs the segsum kernel
+    cgrid = handover_grid(attach_ring(n, n_cells), T + WINDOW, 0.25, rng,
+                          n_cells=n_cells)
+    dem = rng.uniform(0.05, 1.0, n)
+    coup = ring_coupling(n_cells)
+
+    def coupling(k):
+        coupled_interference_mw(cgrid, dem, coup, use_kernel=k)
+
+    coupling(False), coupling(True)
+    stages["coupling_host"] = _best_of(lambda: coupling(False))
+    stages["coupling_fused"] = _best_of(lambda: coupling(True))
+
+    # end-to-end: the estimator-driven engine, before vs after fusing
+    kw = dict(estimator=est, fixed_split=fixed)
+    simulate_fleet(ep, table, prof, cfg, **kw)  # warm
+    simulate_fleet(ep, table, prof, cfg, fused=True, **kw)
+    t1 = time.perf_counter()
+    res_u = simulate_fleet(ep, table, prof, cfg, **kw)
+    dt_u = time.perf_counter() - t1
+    t2 = time.perf_counter()
+    res_f = simulate_fleet(ep, table, prof, cfg, fused=True, **kw)
+    dt_f = time.perf_counter() - t2
+    close = bool(np.allclose(res_f.est_tp, res_u.est_tp, rtol=1e-4,
+                             atol=1e-3))
+    out = {"n": n, "stages_ms": {k: v * 1e3 for k, v in stages.items()},
+           "rate_unfused": n * T / dt_u, "rate_fused": n * T / dt_f,
+           "speedup_fused": dt_u / dt_f, "allclose": close}
+    record(f"profile/n{n}", t0,
+           ";".join(f"{k}_ms={v * 1e3:.1f}" for k, v in stages.items())
+           + f";unfused_ue_steps_per_sec={n * T / dt_u:.0f}"
+           f";fused_ue_steps_per_sec={n * T / dt_f:.0f}"
+           f";fused_speedup_x={dt_u / dt_f:.2f};allclose={close}")
+    return out
+
+
+def _churn_baseline():
+    """(best committed churn_smoke rate in UE-steps/s, its machine config)
+    — the before-record the fused per-period path is compared against."""
+    import json
+    path = (pathlib.Path(__file__).resolve().parents[1]
+            / "benchmarks" / "results" / "churn_smoke.json")
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return None, {}
+    rates = [c["rate"] for c in payload.get("churn") or []]
+    return (max(rates) if rates else None), payload.get("config", {})
+
+
+def run_profile(state: dict, sizes=None, T: int | None = None) -> bool:
+    """The per-period hot-path profile: stage breakdown + fused/unfused
+    before-after at each fleet size, plus the slot-pool path at scale
+    against the committed ``churn_smoke.json`` baseline record."""
+    t0 = time.time()
+    prof = _vgg_profile(state)
+    table, cfg, fixed = fig6_adaptive.fig6_table(prof)
+    est = mesh_estimator()
+    sizes = sizes or ([256] if FAST else [1024])
+    T = T or (10 if FAST else 20)
+    rng = np.random.default_rng(7)
+    cells = [profile_cell(n, T, est, prof, table, cfg, fixed, rng, t0)
+             for n in sizes]
+    # the per-period pool path at scale vs the committed baseline record
+    base_rate, base_cfg = _churn_baseline()
+    slots = 256 if FAST else 4096
+    churn = churn_cell(slots, 0.25, 20, prof, table, cfg, fixed, rng, t0)
+    ratio = (churn["rate"] / base_rate) if base_rate else None
+    record("profile/churn_vs_baseline", t0,
+           f"slots={slots};rate={churn['rate']:.0f};"
+           f"baseline_rate={(base_rate or 0):.0f};"
+           f"baseline_cpu_count={base_cfg.get('cpu_count')};"
+           f"speedup_vs_baseline_x={(ratio or 0):.2f}")
+    state["profile"] = {"cells": cells, "churn": churn,
+                        "churn_baseline_rate": base_rate,
+                        "churn_speedup_vs_baseline": ratio}
+    ok_close = all(c["allclose"] for c in cells)
+    # the speed gates only bind on the full-size run: FAST smokes assert
+    # correctness, not machine-dependent timings
+    ok_speed = FAST or all(c["speedup_fused"] >= 1.5 for c in cells)
+    ok_churn = FAST or ratio is None or ratio >= 1.5
+    record("profile/claims", t0,
+           f"allclose={ok_close};fused_speedup>=1.5x={ok_speed};"
+           f"churn_vs_baseline>=1.5x={ok_churn};"
+           f"sizes={'/'.join(str(s) for s in sizes)}")
+    return ok_close and ok_speed and ok_churn
 
 
 DRIFT_PRE = ("none", "cci")  # the estimator's offline training world
@@ -536,10 +797,7 @@ def online_cell(n: int, T: int, est, prof, table, cfg, fixed, t0) -> dict:
 def run_online(state: dict, sizes=None, T: int | None = None) -> bool:
     """The drift sweep: frozen vs drift-triggered online adaptation."""
     t0 = time.time()
-    prof = state.get("vgg_profile")
-    if prof is None:
-        from repro.models.vgg import FULL, vgg_split_profile
-        prof = state["vgg_profile"] = vgg_split_profile(FULL)
+    prof = _vgg_profile(state)
     table, cfg, fixed = fig6_adaptive.fig6_table(prof)
     n_sc = 32 if FAST else 64
     est = online_estimator(n_sc, steps=400 if FAST else 600)
@@ -560,10 +818,7 @@ def run_online(state: dict, sizes=None, T: int | None = None) -> bool:
 
 def run(state: dict, sizes=None, T: int | None = None) -> bool:
     t0 = time.time()
-    prof = state.get("vgg_profile")
-    if prof is None:
-        from repro.models.vgg import FULL, vgg_split_profile
-        prof = state["vgg_profile"] = vgg_split_profile(FULL)
+    prof = _vgg_profile(state)
     # the fig6 configuration, shared so the equivalence check below always
     # exercises exactly what benchmarks/fig6_adaptive.py runs
     table, cfg, fixed = fig6_adaptive.fig6_table(prof)
@@ -599,6 +854,11 @@ def main() -> int:
     ap.add_argument("--online", action="store_true",
                     help="run the drift sweep: frozen vs drift-triggered "
                     "online estimator adaptation (repro.sim.online)")
+    ap.add_argument("--profile", action="store_true",
+                    help="profile the per-period fleet step: per-stage "
+                    "wall-time breakdown (featurize/estimator/PSO query/"
+                    "scheduler/coupling) plus fused-vs-unfused and "
+                    "int8-vs-fp32 before/after records")
     ap.add_argument("--churn", action="store_true",
                     help="run the slot-pool churn sweep: continuous UE "
                     "arrival/departure through a fixed-capacity slot pool "
@@ -621,6 +881,10 @@ def main() -> int:
         T = args.steps or (10 if (FAST or args.fast) else 30)
         ok = run_mesh(state, args.mesh, sizes=args.sizes, T=T)
         label = "mesh sweep"
+    elif args.profile:
+        T = args.steps or (10 if (FAST or args.fast) else 20)
+        ok = run_profile(state, sizes=args.sizes, T=T)
+        label = "profile sweep"
     elif args.online:
         T = args.steps or (20 if (FAST or args.fast) else 40)
         ok = run_online(state, sizes=args.sizes, T=T)
@@ -643,7 +907,8 @@ def main() -> int:
     if args.json:
         write_json(args.json, {"mesh": state.get("mesh"),
                                "online": state.get("online"),
-                               "churn": state.get("churn"), "ok": ok})
+                               "churn": state.get("churn"),
+                               "profile": state.get("profile"), "ok": ok})
     print(f"# {label} {'OK' if ok else 'FAILED'}", flush=True)
     return 0 if ok else 1
 

@@ -99,10 +99,16 @@ def kpm_window(int_dbm_trace: np.ndarray, load_ratio: float,
                             load_ratio, rng, scenario)[0]
 
 
+# The fixed affine normalisation (deployment can't peek at test stats).
+# Module-level so the fused featurize kernel (repro.kernels.featurize) and
+# this host path share one definition — drift here would silently break
+# the fused-vs-unfused allclose pins.
+KPM_CENTER = np.array([-85, -10.5, 22, -3, 2, 13, 1,
+                       15, 7, 14, 0.5, 400, 40, 8, 2], np.float32)
+KPM_SCALE = np.array([5, 2, 5, 1, 1, 3, 1,
+                      15, 7, 14, 0.5, 400, 60, 15, 6], np.float32)
+
+
 def normalize_kpms(x: np.ndarray) -> np.ndarray:
     """Fixed affine normalisation (deployment can't peek at test stats)."""
-    center = np.array([-85, -10.5, 22, -3, 2, 13, 1,
-                       15, 7, 14, 0.5, 400, 40, 8, 2], np.float32)
-    scale = np.array([5, 2, 5, 1, 1, 3, 1,
-                      15, 7, 14, 0.5, 400, 60, 15, 6], np.float32)
-    return (x - center) / scale
+    return (x - KPM_CENTER) / KPM_SCALE

@@ -79,9 +79,22 @@ def make_indexed_step(e: EstimatorConfig, opt: AdamW, *, mesh=None,
     inserts the gradient all-reduce (psum) automatically — the sharded and
     unsharded steps are numerically interchangeable (pinned allclose by
     ``tests/test_sim_online.py``).
+
+    A ``data`` field may also be a ``(q, scales)`` tuple — the int8
+    replay ring (``sim.online.ReplayBufferQ``): the gather then pulls the
+    int8 rows plus their rowwise scales and dequantizes only the selected
+    minibatch, inside the same compiled step.
     """
+    def _gather(v, idx):
+        if isinstance(v, tuple):  # int8 ring: (q, per-row scales)
+            q, s = v
+            sb = jnp.take(s, idx, axis=0)
+            return (jnp.take(q, idx, axis=0).astype(F32)
+                    * sb.reshape(sb.shape[0], *([1] * (q.ndim - 1))))
+        return jnp.take(v, idx, axis=0)
+
     def _step(params, opt_state, data, idx, key):
-        batch = {k: jnp.take(data[k], idx, axis=0) for k in BATCH_KEYS}
+        batch = {k: _gather(data[k], idx) for k in BATCH_KEYS}
         loss, grads = jax.value_and_grad(
             lambda p: estimator_loss(e, p, batch, key))(params)
         params, opt_state, _ = opt.update(grads, opt_state, params)

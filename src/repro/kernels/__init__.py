@@ -8,5 +8,10 @@ CPU container they execute via interpret=True; on TPU set interpret=False.
   dcor             pairwise-distance tiles for distance correlation
   ssd              Mamba2 state-space-dual chunk scan (VMEM-resident state)
   quant            rowwise symmetric int8 quantisation
+  featurize        fused KPM window extraction + normalisation
+  lstm             fused LSTM-cell scan (fp32 and int8 serving variants)
+  qmm              int8 x int8 -> int32 rowwise-scaled serving matmul
+  segsum           masked batched segment reduction (sum / max)
 """
-from repro.kernels import dcor, flash_attention, quant, ssd  # noqa: F401
+from repro.kernels import (dcor, featurize, flash_attention, lstm,  # noqa: F401
+                           qmm, quant, segsum, ssd)

@@ -1,0 +1,3 @@
+from repro.kernels.featurize.kernel import featurize  # noqa: F401
+from repro.kernels.featurize.ops import kpm_feature_windows  # noqa: F401
+from repro.kernels.featurize.ref import featurize_ref  # noqa: F401

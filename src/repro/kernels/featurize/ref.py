@@ -1,0 +1,21 @@
+"""jnp oracle for the fused KPM featurize kernel.
+
+Same contract as the numpy host path (``EpisodeBatch.kpm_windows``):
+window ``b`` of the output covers raw trace steps ``[b, b + window)``,
+normalized by the fixed affine of ``channel.kpm``. Pure gather + affine,
+so it runs anywhere jnp does.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def featurize_ref(kpms, center, scale, window: int):
+    """kpms (N, L, K) raw -> (N, L - window + 1, window, K) normalized."""
+    x = (jnp.asarray(kpms).astype(F32) - jnp.asarray(center, F32)) \
+        / jnp.asarray(scale, F32)
+    b = x.shape[1] - window + 1
+    idx = jnp.arange(b)[:, None] + jnp.arange(window)[None, :]
+    return x[:, idx]  # (N, B, window, K) one gather

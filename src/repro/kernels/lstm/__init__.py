@@ -1,0 +1,4 @@
+from repro.kernels.lstm.kernel import lstm_scan, lstm_scan_q  # noqa: F401
+from repro.kernels.lstm.ops import lstm_hidden, lstm_hidden_q  # noqa: F401
+from repro.kernels.lstm.ref import (lstm_scan_q_ref,  # noqa: F401
+                                    lstm_scan_ref, qdot_ref)

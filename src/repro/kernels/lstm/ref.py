@@ -1,0 +1,70 @@
+"""jnp oracles for the fused LSTM-cell kernels.
+
+``lstm_scan_ref`` is the ``estimator.model.lstm_branch`` scan without the
+final projection (the kernel's contract: it returns the last hidden
+state); ``lstm_scan_q_ref`` is the int8 serving variant — dynamically
+quantized activations (``core.boundary.rowwise_quant``, the same formula
+the kernel inlines) against pre-quantized per-output-channel weights,
+int8 x int8 -> int32 dots scaled back to f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.boundary import rowwise_quant
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+_CONTRACT_LAST = (((1,), (1,)), ((), ()))
+
+
+def _gates(z, c):
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def lstm_scan_ref(kpms, wx, wh, b):
+    """kpms (B, T, K) -> final hidden state (B, H), f32."""
+    kpms = jnp.asarray(kpms, F32)
+    wx, wh, b = (jnp.asarray(a, F32) for a in (wx, wh, b))
+    h0 = jnp.zeros((kpms.shape[0], wh.shape[0]), F32)
+
+    def cell(carry, x_t):
+        h, c = carry
+        h, c = _gates(x_t @ wx + h @ wh + b, c)
+        return (h, c), None
+
+    (h, _), _ = lax.scan(cell, (h0, jnp.zeros_like(h0)),
+                         kpms.transpose(1, 0, 2))
+    return h
+
+
+def qdot_ref(a, wq, ws, qmax: int = 127):
+    """Dynamic-activation int8 dot: a (B, K) f32 x wq (OUT, K) int8 with
+    per-output scales ws (OUT, 1) -> (B, OUT) f32."""
+    qa, sa = rowwise_quant(jnp.asarray(a, F32), qmax)
+    acc = lax.dot_general(qa, wq, _CONTRACT_LAST,
+                          preferred_element_type=I32)
+    return acc.astype(F32) * sa * jnp.asarray(ws, F32).T
+
+
+def lstm_scan_q_ref(kpms, wxq, wxs, whq, whs, b, qmax: int = 127):
+    """int8 oracle of :func:`..kernel.lstm_scan_q` (same weight layout)."""
+    kpms = jnp.asarray(kpms, F32)
+    b = jnp.asarray(b, F32)
+    h0 = jnp.zeros((kpms.shape[0], whq.shape[1]), F32)
+
+    def cell(carry, x_t):
+        h, c = carry
+        z = qdot_ref(x_t, wxq, wxs, qmax) + qdot_ref(h, whq, whs, qmax) + b
+        h, c = _gates(z, c)
+        return (h, c), None
+
+    (h, _), _ = lax.scan(cell, (h0, jnp.zeros_like(h0)),
+                         kpms.transpose(1, 0, 2))
+    return h

@@ -1,0 +1,3 @@
+from repro.kernels.qmm.kernel import qmm  # noqa: F401
+from repro.kernels.qmm.ops import int8_matmul, quantize_weight  # noqa: F401
+from repro.kernels.qmm.ref import qmm_ref  # noqa: F401

@@ -1,0 +1,21 @@
+"""jnp oracle for the int8 matmul kernel.
+
+One ``lax.dot_general`` with int32 accumulation — integer sums are exact,
+so the tiled kernel must reproduce this bit-for-bit. Also the op GSPMD
+shards under a serving mesh (the kernel is single-device)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+_CONTRACT_LAST = (((1,), (1,)), ((), ()))
+
+
+def qmm_ref(xq, sx, wq, sw):
+    """(M, K) int8 x (N, K) int8 -> (M, N) f32, rowwise scales applied."""
+    acc = lax.dot_general(xq, wq, _CONTRACT_LAST,
+                          preferred_element_type=I32)
+    return acc.astype(F32) * jnp.asarray(sx, F32) * jnp.asarray(sw, F32).T

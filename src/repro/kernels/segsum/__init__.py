@@ -1,0 +1,3 @@
+from repro.kernels.segsum.kernel import segment_reduce_batched  # noqa: F401
+from repro.kernels.segsum.ops import segment_reduce  # noqa: F401
+from repro.kernels.segsum.ref import segment_reduce_ref  # noqa: F401

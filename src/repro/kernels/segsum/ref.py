@@ -1,0 +1,24 @@
+"""jnp oracle for the batched segment reduction kernel.
+
+``jax.ops.segment_{sum,max}`` vmapped over the batch axis — the exact
+ops the scheduler normalizers and cell-load aggregation call today, so
+an allclose pin against this ref is an allclose pin against the engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def segment_reduce_ref(values, seg_ids, n_segments: int, *,
+                       op: str = "sum"):
+    """values (T, N) + seg_ids (T, N) -> (T, C) per-batch reductions."""
+    if op == "sum":
+        fn = lambda v, g: jax.ops.segment_sum(v, g, num_segments=n_segments)
+    elif op == "max":
+        fn = lambda v, g: jax.ops.segment_max(v, g, num_segments=n_segments)
+    else:
+        raise ValueError(f"op must be 'sum' or 'max': {op!r}")
+    return jax.vmap(fn)(values.astype(F32), seg_ids)

@@ -101,10 +101,23 @@ def handover_grid(cell0: np.ndarray, n_steps: int, frac: float,
 
 
 def cell_load(cell_grid: np.ndarray, demand: np.ndarray,
-              n_cells: int) -> np.ndarray:
+              n_cells: int, *, use_kernel: bool = False) -> np.ndarray:
     """(C, T) aggregate offered load per cell per step: the mean UL load
-    ratio of the attached UEs (0 for an empty cell), in [0, 1]."""
+    ratio of the attached UEs (0 for an empty cell), in [0, 1].
+
+    ``use_kernel`` aggregates through the ``kernels/segsum`` Pallas
+    kernel — tiled one-hot reductions over (T, N) batches — instead of
+    materializing the (N, T, C) one-hot tensor on the host; allclose to
+    the default (pinned by ``tests/test_kernels_fused.py``)."""
     grid = np.asarray(cell_grid)
+    if use_kernel:
+        from repro.kernels.segsum import segment_reduce
+        ids = grid.T.astype(np.int32)  # (T, N)
+        dem = np.broadcast_to(np.asarray(demand, np.float32), ids.shape)
+        tot = np.asarray(segment_reduce(dem, ids, n_cells, op="sum"))
+        cnt = np.asarray(segment_reduce(np.ones_like(dem), ids, n_cells,
+                                        op="sum"))
+        return np.asarray((tot / np.maximum(cnt, 1)).T, float)  # (C, T)
     onehot = grid[..., None] == np.arange(n_cells)  # (N, T, C)
     tot = (np.asarray(demand, float)[:, None, None] * onehot).sum(axis=0)
     cnt = onehot.sum(axis=0)
@@ -112,13 +125,15 @@ def cell_load(cell_grid: np.ndarray, demand: np.ndarray,
 
 
 def coupled_interference_mw(cell_grid: np.ndarray, demand: np.ndarray,
-                            coupling: np.ndarray) -> np.ndarray:
+                            coupling: np.ndarray, *,
+                            use_kernel: bool = False) -> np.ndarray:
     """(N, T) neighbour-cell interference floor (linear mW) per UE: each
     cell's aggregate load, pushed through the (C, C) coupling matrix, read
     back at every UE through its per-period cell assignment."""
     coupling = np.asarray(coupling, float)
     n_cells = coupling.shape[0]
-    load = cell_load(cell_grid, demand, n_cells)  # (C, T)
+    load = cell_load(cell_grid, demand, n_cells,
+                     use_kernel=use_kernel)  # (C, T)
     at_cell = coupling @ load  # (C, T) extra power at each victim cell
     return at_cell[np.asarray(cell_grid),
                    np.arange(cell_grid.shape[1])[None]]

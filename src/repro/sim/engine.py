@@ -28,8 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.channel import kpm as kpmmod
 from repro.channel import throughput as tpmod
-from repro.channel.scenarios import SCENARIOS, EpisodeBatch
+from repro.channel.scenarios import SCENARIOS, WINDOW, EpisodeBatch
 from repro.core.controller import (AdaptiveSplitController, ControllerConfig,
                                    controller_init, controller_step)
 from repro.core.energy import EDGE_A40X2, UE_VM_2CORE, DeviceProfile
@@ -37,7 +38,9 @@ from repro.core.objective import Constraints, Weights, evaluate
 from repro.core.profiles import SplitProfile
 # the estimator clamp range is part of the PSO sweep config, not ours
 from repro.core.pso import TP_CLIP_MBPS, LookupTable, StackedLookupTable
-from repro.estimator.train import predict
+from repro.estimator.serve import check_quant, fwd_int8, quantize_estimator
+from repro.estimator.train import fwd
+from repro.kernels.featurize import kpm_feature_windows
 from repro.sim.sched import SchedulerConfig, scheduler_init, scheduler_step
 from repro.sim.serving import ServingMesh, sharded_fleet_estimate
 
@@ -193,7 +196,8 @@ def run_scheduled(tables: np.ndarray, est_tp: np.ndarray,
 
 
 def emit_period_samples(episode: EpisodeBatch, t: int,
-                        wins: Optional[np.ndarray] = None) -> dict:
+                        wins: Optional[np.ndarray] = None, *,
+                        trace: Optional[np.ndarray] = None) -> dict:
     """The (kpms, iq, alloc -> measured tp) sample batch report period
     ``t`` emits: N rows of estimator inputs plus the period's *measured*
     throughput in Mbps — the label the fleet observes for free after
@@ -203,10 +207,18 @@ def emit_period_samples(episode: EpisodeBatch, t: int,
 
     ``wins``: optionally the precomputed float32
     ``episode.kpm_windows(normalize=True)`` so per-period callers amortize
-    the window view across the episode."""
-    if wins is None:
-        wins = episode.kpm_windows(normalize=True).astype(np.float32)
-    return {"kpms": wins[:, t],
+    the window view across the episode. ``trace``: the fused-featurize
+    alternative — the (N, T + WINDOW, 15) *normalized* float32 KPM trace;
+    period ``t``'s window is then the ``trace[:, t:t+WINDOW]`` view, the
+    same f32 elements as ``wins[:, t]`` without ever materializing the
+    (N, T, WINDOW, 15) tensor."""
+    if trace is not None:
+        kp = trace[:, t:t + WINDOW]
+    else:
+        if wins is None:
+            wins = episode.kpm_windows(normalize=True).astype(np.float32)
+        kp = wins[:, t]
+    return {"kpms": kp,
             "iq": episode.iq[:, t].astype(np.float32),
             "alloc": episode.alloc_ratio.astype(np.float32),
             "tp": episode.tp_mbps[:, t].astype(np.float32)}
@@ -219,7 +231,9 @@ EST_CHUNK_ROWS = 8192
 
 
 def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
-                   *, serving: Optional[ServingMesh] = None) -> np.ndarray:
+                   *, serving: Optional[ServingMesh] = None,
+                   quant: Optional[str] = None,
+                   fused: bool = False) -> np.ndarray:
     """(N, T) estimated throughput in Mbps, clipped into ``tp_clip``.
 
     Batched inference over the fleet (the AF's batch path): period ``t``
@@ -239,18 +253,46 @@ def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
     the mesh's data axis, weights replicated — instead of the
     single-device ``predict`` path. Both paths compute the same per-UE
     math; they are pinned allclose by ``tests/test_serving_mesh.py``.
+
+    ``fused=True`` replaces the host stride-trick window materialization
+    — a WINDOW x blowup of the whole KPM trace — with the fused featurize
+    path: per chunk, the ``kernels/featurize`` Pallas kernel normalizes
+    and windows the raw trace on device (under a serving mesh, the
+    equivalent per-period trace *view*, which is bit-identical to the
+    unfused elements). ``quant="int8"`` serves ``quantize_estimator``
+    weights through the int8 kernels (``estimator.serve``). Both default
+    off; ``fused=False, quant=None`` is the exact prior program (pinned
+    by ``tests/test_sim_fused.py``).
     """
     ecfg, params = estimator
+    check_quant(quant)
+    if fused and episode.kpms is None:
+        raise ValueError("fused featurize needs raw KPM reports: generate "
+                         "the episode with include_kpms=True")
     if episode.iq is None:
         raise ValueError(
             "estimator inference needs IQ spectrograms: generate the episode "
             "with include_iq=True")
     n, t_steps = episode.n_ues, episode.n_steps
-    wins = episode.kpm_windows(normalize=True).astype(np.float32)
     alloc = episode.alloc_ratio.astype(np.float32)
     if serving is not None:
-        return sharded_fleet_estimate(ecfg, params, wins,
-                                      episode.iq, alloc, serving, tp_clip)
+        if fused:
+            # normalized trace, windowed per period as a view (the f64
+            # normalize + f32 cast matches kpm_windows bit-for-bit)
+            trace = kpmmod.normalize_kpms(episode.kpms).astype(np.float32)
+            return sharded_fleet_estimate(ecfg, params, trace, episode.iq,
+                                          alloc, serving, tp_clip,
+                                          quant=quant, window=WINDOW)
+        wins = episode.kpm_windows(normalize=True).astype(np.float32)
+        return sharded_fleet_estimate(ecfg, params, wins, episode.iq,
+                                      alloc, serving, tp_clip, quant=quant)
+    qparams = quantize_estimator(params) if quant == "int8" else None
+    if fused:
+        kpms_d = jnp.asarray(episode.kpms, jnp.float32)
+        center = jnp.asarray(kpmmod.KPM_CENTER)
+        scale = jnp.asarray(kpmmod.KPM_SCALE)
+    else:
+        wins = episode.kpm_windows(normalize=True).astype(np.float32)
     est = np.empty((n, t_steps))
     periods = max(1, min(t_steps, EST_CHUNK_ROWS // max(n, 1)))
     for t0 in range(0, t_steps, periods):
@@ -258,14 +300,23 @@ def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
         sl = slice(t0, t0 + b)
         rows = n * b
         # (N, b, ...) -> (N*b, ...): row (u * b + j) is UE u at period t0+j
-        data = {"kpms": np.ascontiguousarray(wins[:, sl]).reshape(
-                    rows, *wins.shape[2:]),
-                "iq": np.asarray(episode.iq[:, sl], np.float32).reshape(
-                    rows, *episode.iq.shape[2:]),
-                "alloc": np.repeat(alloc, b),
-                "tp": np.empty(rows, np.float32)}
-        est[:, sl] = np.asarray(
-            predict(ecfg, params, data, batch=None)).reshape(n, b)
+        if fused:
+            # window j of the chunk covers trace steps [t0+j, t0+j+WINDOW)
+            kw = kpm_feature_windows(kpms_d[:, t0:t0 + b + WINDOW - 1],
+                                     center, scale, WINDOW)
+            kpms_rows = kw.reshape(rows, WINDOW, kw.shape[-1])
+        else:
+            kpms_rows = jnp.asarray(np.ascontiguousarray(wins[:, sl]).reshape(
+                rows, *wins.shape[2:]))
+        iq_rows = jnp.asarray(np.asarray(episode.iq[:, sl],
+                                         np.float32).reshape(
+            rows, *episode.iq.shape[2:]))
+        alloc_rows = jnp.asarray(np.repeat(alloc, b))
+        if quant == "int8":
+            out = fwd_int8(ecfg, qparams, kpms_rows, iq_rows, alloc_rows)
+        else:
+            out = fwd(ecfg, params, kpms_rows, iq_rows, alloc_rows)
+        est[:, sl] = np.asarray(out).reshape(n, b)
     return np.clip(est, tp_clip[0], tp_clip[1])
 
 
@@ -279,7 +330,9 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
                    sched: Optional[SchedulerConfig] = None,
                    cell_idx: Optional[np.ndarray] = None,
                    n_cells: int = 1,
-                   churn=None, capacity: Optional[int] = None) -> FleetResult:
+                   churn=None, capacity: Optional[int] = None,
+                   quant: Optional[str] = None,
+                   fused: bool = False) -> FleetResult:
     """Vectorized fleet simulation (the production path).
 
     Consumes an ``EpisodeBatch`` of N UEs over T report periods (0.1 s
@@ -335,7 +388,20 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
     (the default) never touches ``repro.sim.pool``: the batch-synchronous
     path below is the PR 5 program unchanged (pinned by
     ``tests/test_sim_pool.py``).
+
+    ``quant`` / ``fused`` (defaults None / False): the int8 serving and
+    fused-featurize switches, forwarded to ``estimate_fleet`` (and the
+    pool/online loops). They change how the per-period estimates are
+    computed, never the controller scan; with the defaults the program is
+    bit-identical to the PR 6 engine (pinned by
+    ``tests/test_sim_fused.py``). ``quant`` requires a frozen estimator
+    (the online trainer adapts fp32 weights).
     """
+    check_quant(quant)
+    if online is not None and quant is not None:
+        raise ValueError(
+            "online adaptation serves the fp32 weights it trains; int8 "
+            "serving (quant=...) needs a frozen estimator")
     if churn is not None:
         from repro.sim.pool import simulate_pool
         if capacity is None:
@@ -345,7 +411,8 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
                              estimator=estimator, serving=serving,
                              online=online, fixed_split=fixed_split,
                              ue=ue, server=server, sched=sched,
-                             cell=cell_idx, n_cells=n_cells)
+                             cell=cell_idx, n_cells=n_cells,
+                             quant=quant, fused=fused)
     tables = (table.tables if isinstance(table, StackedLookupTable)
               else np.broadcast_to(table.table,
                                    (episode.n_ues, len(table.table))))
@@ -356,9 +423,11 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
         if estimator is None:
             raise ValueError("online adaptation needs an estimator")
         est_tp, online_stats = online_estimate_fleet(episode, estimator,
-                                                     online, serving=serving)
+                                                     online, serving=serving,
+                                                     fused=fused)
     else:
-        est_tp = (estimate_fleet(episode, estimator, serving=serving)
+        est_tp = (estimate_fleet(episode, estimator, serving=serving,
+                                 quant=quant, fused=fused)
                   if estimator is not None else true_tp)
     if warm_split is None:
         warm_split = cfg.fallback_split if fixed_split is None else fixed_split

@@ -42,17 +42,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.channel import kpm as kpmmod
 from repro.checkpoint import CheckpointManager
 from repro.core.pso import TP_CLIP_MBPS
 from repro.dist import sharding as sh
 from repro.estimator.model import EstimatorConfig
 from repro.estimator.train import fwd, make_indexed_step
+from repro.kernels.quant.ref import quantize_ref
 from repro.optim import AdamW
 from repro.sim.serving import (ServingMesh, replicate_params,
                                serving_program)
 
 F32 = jnp.float32
 I32 = jnp.int32
+
+RING_QUANT_MODES = (None, "int8")
 
 
 # --------------------------------------------------------------- buffer
@@ -77,23 +81,66 @@ class ReplayBuffer(NamedTuple):
         return self.tp.shape[0]
 
 
+class ReplayBufferQ(NamedTuple):
+    """The int8 ring (``OnlineConfig.ring_quant="int8"``): same contract
+    as :class:`ReplayBuffer` but the two big sample tensors are stored as
+    rowwise-quantized int8 plus one f32 scale per sample — the
+    ``kernels/quant`` formula applied inside the ingest scatter, ~4x less
+    replay memory. Minibatches are dequantized on the trainer's
+    in-program gather (``estimator.train.make_indexed_step``)."""
+
+    kpms_q: jax.Array  # (C, WINDOW, 15) int8
+    kpms_s: jax.Array  # (C, 1) f32 rowwise scales
+    iq_q: jax.Array  # (C, 2, n_sc, 14) int8
+    iq_s: jax.Array  # (C, 1) f32 rowwise scales
+    alloc: jax.Array  # (C,) PRB allocation ratios
+    tp: jax.Array  # (C,) measured throughput labels (Mbps)
+    head: jax.Array  # i32 scalar — next write slot
+    seen: jax.Array  # i32 scalar — total rows ever ingested
+
+    @property
+    def capacity(self) -> int:
+        return self.tp.shape[0]
+
+
+def _rowq(x):
+    """Per-sample quantization of an (n, ...) batch: the ``kernels/quant``
+    rowwise formula over each sample's flattened features."""
+    q, s = quantize_ref(x.reshape(x.shape[0], -1))
+    return q.reshape(x.shape), s
+
+
 def buffer_init(capacity: int, e: EstimatorConfig,
-                serving: Optional[ServingMesh] = None) -> ReplayBuffer:
+                serving: Optional[ServingMesh] = None,
+                quant: Optional[str] = None):
     """An empty ring for ``capacity`` rows of this estimator's shapes.
 
     With ``serving`` the sample arrays are committed row-sharded over the
     mesh's data axis (``dist.sharding.put`` under the ``batch`` rule); on
-    a single device / no mesh they are plain device arrays."""
-    z = {"kpms": jnp.zeros((capacity, e.window, e.n_kpms), F32),
-         "iq": jnp.zeros((capacity, 2, e.n_sc, e.n_sym), F32),
-         "alloc": jnp.zeros((capacity,), F32),
-         "tp": jnp.zeros((capacity,), F32)}
+    a single device / no mesh they are plain device arrays.
+    ``quant="int8"`` builds the quantized ring (:class:`ReplayBufferQ`)."""
+    if quant not in RING_QUANT_MODES:
+        raise ValueError(
+            f"ring_quant must be one of {RING_QUANT_MODES}: {quant!r}")
+    if quant == "int8":
+        z = {"kpms_q": jnp.zeros((capacity, e.window, e.n_kpms), jnp.int8),
+             "kpms_s": jnp.ones((capacity, 1), F32),
+             "iq_q": jnp.zeros((capacity, 2, e.n_sc, e.n_sym), jnp.int8),
+             "iq_s": jnp.ones((capacity, 1), F32),
+             "alloc": jnp.zeros((capacity,), F32),
+             "tp": jnp.zeros((capacity,), F32)}
+        cls = ReplayBufferQ
+    else:
+        z = {"kpms": jnp.zeros((capacity, e.window, e.n_kpms), F32),
+             "iq": jnp.zeros((capacity, 2, e.n_sc, e.n_sym), F32),
+             "alloc": jnp.zeros((capacity,), F32),
+             "tp": jnp.zeros((capacity,), F32)}
+        cls = ReplayBuffer
     if serving is not None:
         with sh.use_rules(serving.mesh, serving.rule_overrides()):
             z = {k: sh.put(v, ("batch",) + (None,) * (v.ndim - 1))
                  for k, v in z.items()}
-    return ReplayBuffer(head=jnp.zeros((), I32), seen=jnp.zeros((), I32),
-                        **z)
+    return cls(head=jnp.zeros((), I32), seen=jnp.zeros((), I32), **z)
 
 
 @functools.partial(jax.jit, donate_argnums=0)
@@ -113,7 +160,28 @@ def _ring_scatter(buf: ReplayBuffer, kpms, iq, alloc, tp) -> ReplayBuffer:
         seen=buf.seen + n)
 
 
-def buffer_add(buf: ReplayBuffer, kpms, iq, alloc, tp) -> ReplayBuffer:
+@functools.partial(jax.jit, donate_argnums=0)
+def _ring_scatter_q(buf: ReplayBufferQ, kpms, iq, alloc,
+                    tp) -> ReplayBufferQ:
+    # same in-place ring write as _ring_scatter, with the two big tensors
+    # rowwise-quantized inside the donated program (no fp32 staging copy)
+    cap = buf.tp.shape[0]
+    n = tp.shape[0]
+    idx = (buf.head + jnp.arange(n, dtype=I32)) % cap
+    kq, ks = _rowq(kpms)
+    iqq, iqs = _rowq(iq)
+    return ReplayBufferQ(
+        kpms_q=buf.kpms_q.at[idx].set(kq),
+        kpms_s=buf.kpms_s.at[idx].set(ks),
+        iq_q=buf.iq_q.at[idx].set(iqq),
+        iq_s=buf.iq_s.at[idx].set(iqs),
+        alloc=buf.alloc.at[idx].set(alloc),
+        tp=buf.tp.at[idx].set(tp),
+        head=(buf.head + n) % cap,
+        seen=buf.seen + n)
+
+
+def buffer_add(buf, kpms, iq, alloc, tp):
     """Ring-ingest a batch of N sample rows (oldest rows overwritten).
 
     N > capacity keeps the newest ``capacity`` rows — the overflow is
@@ -123,8 +191,10 @@ def buffer_add(buf: ReplayBuffer, kpms, iq, alloc, tp) -> ReplayBuffer:
     n = int(np.shape(tp)[0])
     if n > cap:
         kpms, iq, alloc, tp = (x[-cap:] for x in (kpms, iq, alloc, tp))
-    return _ring_scatter(buf, jnp.asarray(kpms, F32), jnp.asarray(iq, F32),
-                         jnp.asarray(alloc, F32), jnp.asarray(tp, F32))
+    scatter = (_ring_scatter_q if isinstance(buf, ReplayBufferQ)
+               else _ring_scatter)
+    return scatter(buf, jnp.asarray(kpms, F32), jnp.asarray(iq, F32),
+                   jnp.asarray(alloc, F32), jnp.asarray(tp, F32))
 
 
 @functools.partial(jax.jit, donate_argnums=0)
@@ -148,8 +218,30 @@ def _ring_scatter_masked(buf: ReplayBuffer, kpms, iq, alloc, tp,
         seen=buf.seen + k)
 
 
-def buffer_add_masked(buf: ReplayBuffer, kpms, iq, alloc, tp,
-                      mask) -> ReplayBuffer:
+@functools.partial(jax.jit, donate_argnums=0)
+def _ring_scatter_masked_q(buf: ReplayBufferQ, kpms, iq, alloc, tp,
+                           mask) -> ReplayBufferQ:
+    # _ring_scatter_masked with in-program rowwise quantization; masked
+    # rows are quantized too (fixed shapes) but dropped at the scatter
+    cap = buf.tp.shape[0]
+    m = mask.astype(I32)
+    k = m.sum()
+    pos = jnp.cumsum(m) - 1
+    idx = jnp.where(mask, (buf.head + pos) % cap, cap)
+    kq, ks = _rowq(kpms)
+    iqq, iqs = _rowq(iq)
+    return ReplayBufferQ(
+        kpms_q=buf.kpms_q.at[idx].set(kq, mode="drop"),
+        kpms_s=buf.kpms_s.at[idx].set(ks, mode="drop"),
+        iq_q=buf.iq_q.at[idx].set(iqq, mode="drop"),
+        iq_s=buf.iq_s.at[idx].set(iqs, mode="drop"),
+        alloc=buf.alloc.at[idx].set(alloc, mode="drop"),
+        tp=buf.tp.at[idx].set(tp, mode="drop"),
+        head=(buf.head + k) % cap,
+        seen=buf.seen + k)
+
+
+def buffer_add_masked(buf, kpms, iq, alloc, tp, mask):
     """Ring-ingest only the rows where ``mask`` is True (the slot-pool
     path: a churning fleet must not train on empty slots' zero samples).
 
@@ -164,20 +256,30 @@ def buffer_add_masked(buf: ReplayBuffer, kpms, iq, alloc, tp,
         raise ValueError(
             f"masked ingest of {n} slots exceeds ring capacity {cap}; "
             "size OnlineConfig.capacity >= the slot-pool capacity")
-    return _ring_scatter_masked(buf, jnp.asarray(kpms, F32),
-                                jnp.asarray(iq, F32),
-                                jnp.asarray(alloc, F32),
-                                jnp.asarray(tp, F32),
-                                jnp.asarray(mask, bool))
+    scatter = (_ring_scatter_masked_q if isinstance(buf, ReplayBufferQ)
+               else _ring_scatter_masked)
+    return scatter(buf, jnp.asarray(kpms, F32),
+                   jnp.asarray(iq, F32),
+                   jnp.asarray(alloc, F32),
+                   jnp.asarray(tp, F32),
+                   jnp.asarray(mask, bool))
 
 
-def buffer_count(buf: ReplayBuffer) -> int:
+def buffer_count(buf) -> int:
     """Valid rows in the ring (saturates at capacity)."""
     return int(min(int(buf.seen), buf.capacity))
 
 
-def buffer_data(buf: ReplayBuffer) -> dict:
-    """The buffer as the dict ``make_indexed_step`` consumes."""
+def buffer_data(buf) -> dict:
+    """The buffer as the dict ``make_indexed_step`` consumes.
+
+    On the int8 ring the two big fields come out as ``(q, scales)``
+    tuples; the trainer's in-program gather dequantizes exactly the
+    minibatch rows it selects, never the whole ring."""
+    if isinstance(buf, ReplayBufferQ):
+        return {"kpms": (buf.kpms_q, buf.kpms_s),
+                "iq": (buf.iq_q, buf.iq_s), "alloc": buf.alloc,
+                "tp": buf.tp}
     return {"kpms": buf.kpms, "iq": buf.iq, "alloc": buf.alloc,
             "tp": buf.tp}
 
@@ -273,6 +375,9 @@ class OnlineConfig:
     clip_norm: float = 1.0
     min_fill: int = 256  # don't adapt before this many buffered rows
     seed: int = 0  # minibatch sampling + dropout keys
+    ring_quant: Optional[str] = None  # "int8" stores replay samples
+    # rowwise-quantized (~4x less ring memory; dequantized on the
+    # trainer's minibatch gather). None keeps the exact fp32 ring.
     drift: DriftConfig = DriftConfig()
     ckpt_dir: Optional[str] = None  # CheckpointManager dir for adapted
     # weights; None disables checkpointing
@@ -309,7 +414,7 @@ def online_step_program(ecfg: EstimatorConfig, opt: AdamW,
 
 def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
                           serving: Optional[ServingMesh] = None,
-                          tp_clip=TP_CLIP_MBPS
+                          tp_clip=TP_CLIP_MBPS, fused: bool = False
                           ) -> tuple[np.ndarray, OnlineStats]:
     """(N, T) Mbps estimates + :class:`OnlineStats`: the closed loop.
 
@@ -328,6 +433,10 @@ def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
     the labels, so the engine can run its controller scan on the returned
     array afterwards — ``simulate_fleet(online=...)`` does exactly that,
     which keeps online composable with scheduling and fixed baselines.
+
+    ``fused=True`` swaps the WINDOW x host window materialization for
+    per-period views of the normalized KPM trace (bit-identical f32
+    elements, see ``engine.emit_period_samples``).
     """
     from repro.sim.engine import emit_period_samples
 
@@ -337,7 +446,13 @@ def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
             "online adaptation needs IQ spectrograms: generate the episode "
             "with include_iq=True")
     n, t_steps = episode.n_ues, episode.n_steps
-    wins = episode.kpm_windows(normalize=True).astype(np.float32)
+    if fused:
+        wins = None
+        trace = np.ascontiguousarray(
+            kpmmod.normalize_kpms(episode.kpms).astype(np.float32))
+    else:
+        wins = episode.kpm_windows(normalize=True).astype(np.float32)
+        trace = None
     opt = AdamW(lr=ocfg.lr, weight_decay=ocfg.weight_decay,
                 clip_norm=ocfg.clip_norm)
     opt_state = opt.init(params)
@@ -351,7 +466,8 @@ def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
         ctx = contextlib.nullcontext()
     mgr = (CheckpointManager(ocfg.ckpt_dir, keep=ocfg.ckpt_keep)
            if ocfg.ckpt_dir else None)
-    buf = buffer_init(ocfg.capacity, ecfg, serving=serving)
+    buf = buffer_init(ocfg.capacity, ecfg, serving=serving,
+                      quant=ocfg.ring_quant)
     dstate = drift_init()
     rng = np.random.default_rng(ocfg.seed)
     key = jax.random.PRNGKey(ocfg.seed)
@@ -367,7 +483,7 @@ def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
 
         alloc_d = place(episode.alloc_ratio, ("batch",))
         for t in range(t_steps):
-            s = emit_period_samples(episode, t, wins)
+            s = emit_period_samples(episode, t, wins, trace=trace)
             kpms_t = place(s["kpms"], ("batch", None, None))
             iq_t = place(s["iq"], ("batch", None, None, None))
             est[:, t] = np.clip(

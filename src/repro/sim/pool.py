@@ -46,7 +46,7 @@ import numpy as np
 from jax import lax
 
 from repro.channel import throughput as tpmod
-from repro.channel.scenarios import ChurnSchedule, EpisodeBatch
+from repro.channel.scenarios import WINDOW, ChurnSchedule, EpisodeBatch
 from repro.core.controller import (PENDING_NONE, ControllerConfig,
                                    ControllerState, controller_init,
                                    controller_step)
@@ -215,7 +215,14 @@ def pool_programs(ewma_alpha: float, hysteresis_steps: int,
         el = true.shape[1]
         sidc = jnp.clip(st.sid, 0, m - 1)
         agec = jnp.clip(st.age, 0, el - 1)
-        return (wins[sidc, agec], iq[sidc, agec], alloc[sidc],
+        if wins.ndim == 4:  # (M, T, WINDOW, 15) precomputed windows
+            k = wins[sidc, agec]
+        else:  # fused featurize: (M, T + WINDOW, 15) normalized trace —
+            # slot age a reads the trace span [a, a + WINDOW) directly,
+            # so the windowed tensor is never materialized
+            k = wins[sidc[:, None], agec[:, None]
+                     + jnp.arange(WINDOW, dtype=I32)[None]]
+        return (k, iq[sidc, agec], alloc[sidc],
                 _gather_tp(st, true), st.active)
 
     @jax.jit
@@ -313,7 +320,8 @@ def simulate_pool(sessions: EpisodeBatch, schedule: ChurnSchedule, table,
                   ue: DeviceProfile = UE_VM_2CORE,
                   server: DeviceProfile = EDGE_A40X2,
                   sched: Optional[SchedulerConfig] = None,
-                  cell: Optional[np.ndarray] = None, n_cells: int = 1):
+                  cell: Optional[np.ndarray] = None, n_cells: int = 1,
+                  quant: Optional[str] = None, fused: bool = False):
     """Run a churning UE population through the slot pool.
 
     ``sessions``: an ``EpisodeBatch`` with one row per scheduled session —
@@ -330,6 +338,9 @@ def simulate_pool(sessions: EpisodeBatch, schedule: ChurnSchedule, table,
     and ``result.lifecycle`` carries the admission/departure accounting.
     ``sched``/``estimator``/``online``/``fixed_split`` compose exactly as
     in ``simulate_fleet``; ``cell`` is a static (M,) per-session attach.
+    ``quant``/``fused`` are the int8-serving / fused-featurize switches,
+    forwarded to the frozen and online estimate paths (defaults are the
+    exact prior program).
     """
     from repro.sim.engine import FleetResult, estimate_fleet, split_metrics
 
@@ -357,10 +368,12 @@ def simulate_pool(sessions: EpisodeBatch, schedule: ChurnSchedule, table,
     if online is not None:
         outs, est_tp, online_stats = _online_pool_run(
             sessions, schedule, estimator, online, programs, st0, tables_d,
-            warm_d, true_d, cell_d, dwell_d, arrival_d, serving=serving)
+            warm_d, true_d, cell_d, dwell_d, arrival_d, serving=serving,
+            fused=fused)
         act_ts, sid_ts, age_ts, split_ts, share_ts, lat_ts, dep_ts = outs
     else:
-        est_np = (estimate_fleet(sessions, estimator, serving=serving)
+        est_np = (estimate_fleet(sessions, estimator, serving=serving,
+                                 quant=quant, fused=fused)
                   if estimator is not None else true_np)
         est_d = jnp.asarray(est_np, F32)
         _, ys = programs.sweep(st0, tables_d, warm_d, est_d, true_d, cell_d,
@@ -415,7 +428,8 @@ def simulate_pool(sessions: EpisodeBatch, schedule: ChurnSchedule, table,
 
 def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
                      tables_d, warm_d, true_d, cell_d, dwell_d, arrival_d,
-                     *, serving=None, tp_clip=TP_CLIP_MBPS):
+                     *, serving=None, tp_clip=TP_CLIP_MBPS,
+                     fused=False):
     """The closed-loop arm of ``simulate_pool``: the same admit/serve/
     retire step driven from a host loop so each period's estimator
     forward runs with the *current* weights, only active slots' samples
@@ -445,8 +459,18 @@ def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
             f"OnlineConfig.capacity ({ocfg.capacity}) must cover the pool "
             f"capacity ({s_slots}) for masked ingestion")
     t_steps = schedule.horizon
-    wins_d = jnp.asarray(
-        sessions.kpm_windows(normalize=True).astype(np.float32))
+    if fused:
+        # normalized trace instead of the WINDOW x window tensor; the
+        # pool gather windows it per slot age (bit-identical elements)
+        from repro.channel import kpm as kpmmod
+        if sessions.kpms is None:
+            raise ValueError("fused featurize needs raw KPM reports: "
+                             "generate sessions with include_kpms=True")
+        wins_d = jnp.asarray(
+            kpmmod.normalize_kpms(sessions.kpms).astype(np.float32))
+    else:
+        wins_d = jnp.asarray(
+            sessions.kpm_windows(normalize=True).astype(np.float32))
     iq_d = jnp.asarray(np.asarray(sessions.iq, np.float32))
     alloc_d = jnp.asarray(sessions.alloc_ratio.astype(np.float32))
     ready = np.asarray(schedule.ready_end, np.int64)
@@ -463,7 +487,8 @@ def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
         ctx = contextlib.nullcontext()
     mgr = (CheckpointManager(ocfg.ckpt_dir, keep=ocfg.ckpt_keep)
            if ocfg.ckpt_dir else None)
-    buf = buffer_init(ocfg.capacity, ecfg, serving=serving)
+    buf = buffer_init(ocfg.capacity, ecfg, serving=serving,
+                      quant=ocfg.ring_quant)
     dstate = drift_init()
     rng = np.random.default_rng(ocfg.seed)
     key = jax.random.PRNGKey(ocfg.seed)

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.ops import segment_max, segment_sum
 
+from repro.kernels.segsum import segment_reduce
+
 POLICIES = ("rr", "pf", "maxsinr")
 
 F32 = jnp.float32
@@ -43,6 +45,10 @@ class SchedulerConfig:
     n_prb: int = 100  # cell PRB budget per period (alloc = share * n_prb)
     pf_beta: float = 0.1  # EWMA weight of the newest served-rate sample
     eps: float = 1e-6  # floor for PF averages / empty-cell denominators
+    fused: bool = False  # route the per-cell reductions through the
+    # kernels/segsum Pallas kernel (one-hot compare in VMEM) instead of
+    # XLA scatter-based segment_sum/segment_max; allclose to the default
+    # (pinned by tests/test_kernels_fused.py / test_sim_fused.py)
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -67,14 +73,17 @@ def scheduler_init(n_ues: int, avg0: float = 1.0) -> SchedulerState:
                           step=jnp.zeros((), I32))
 
 
-def cell_shares(weights, cell_idx, n_cells: int, eps: float = 1e-6):
+def cell_shares(weights, cell_idx, n_cells: int, eps: float = 1e-6,
+                fused: bool = False):
     """Normalize per-UE weights into per-cell PRB shares.
 
     ``share_u = w_u / sum_{v in cell(u)} w_v`` — shares sum to 1 over every
     non-empty cell (PRB conservation) and the computation is elementwise +
-    segment sums, so it is permutation-equivariant in the UE axis."""
+    segment sums, so it is permutation-equivariant in the UE axis.
+    ``fused`` runs the normalizer sum as the ``kernels/segsum`` kernel."""
     w = jnp.asarray(weights, F32)
-    denom = segment_sum(w, cell_idx, num_segments=n_cells)
+    denom = (segment_reduce(w, cell_idx, n_cells, op="sum") if fused
+             else segment_sum(w, cell_idx, num_segments=n_cells))
     return w / jnp.maximum(denom[cell_idx], eps)
 
 
@@ -97,15 +106,20 @@ def scheduler_step(cfg: SchedulerConfig, n_cells: int, state: SchedulerState,
     r = jnp.asarray(rate_mbps, F32)
     cell_idx = jnp.asarray(cell_idx, I32)
     beta = F32(cfg.pf_beta)
+
+    def seg_max(v, g, c):
+        return (segment_reduce(v, g, c, op="max") if cfg.fused
+                else segment_max(v, g, num_segments=c))
+
     if active is None:
         if cfg.policy == "rr":
             w = jnp.ones_like(r)
         elif cfg.policy == "pf":
             w = r / jnp.maximum(state.avg_tp, cfg.eps)
         else:  # maxsinr (validated in __post_init__)
-            cmax = segment_max(r, cell_idx, num_segments=n_cells)
+            cmax = seg_max(r, cell_idx, n_cells)
             w = (r >= cmax[cell_idx]).astype(F32)
-        share = cell_shares(w, cell_idx, n_cells, cfg.eps)
+        share = cell_shares(w, cell_idx, n_cells, cfg.eps, cfg.fused)
         new = SchedulerState(
             avg_tp=(1 - beta) * state.avg_tp + beta * r * share,
             step=state.step + 1)
@@ -118,9 +132,9 @@ def scheduler_step(cfg: SchedulerConfig, n_cells: int, state: SchedulerState,
     elif cfg.policy == "pf":
         w = actf * (r / jnp.maximum(state.avg_tp, cfg.eps))
     else:  # maxsinr
-        cmax = segment_max(r, cell_m, num_segments=n_cells + 1)
+        cmax = seg_max(r, cell_m, n_cells + 1)
         w = ((r >= cmax[cell_m]) & act).astype(F32)
-    share = cell_shares(w, cell_m, n_cells + 1, cfg.eps)
+    share = cell_shares(w, cell_m, n_cells + 1, cfg.eps, cfg.fused)
     new = SchedulerState(
         avg_tp=jnp.where(act, (1 - beta) * state.avg_tp + beta * r * share,
                          state.avg_tp),

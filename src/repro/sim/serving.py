@@ -47,6 +47,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.dist import sharding as sh
 from repro.estimator.model import EstimatorConfig, estimator_forward
+from repro.estimator.serve import (check_quant, estimator_forward_int8,
+                                   quantize_estimator)
 from repro.launch.mesh import make_host_mesh
 
 
@@ -101,7 +103,8 @@ def make_serving_mesh(spec: str = "1x1",
 
 
 @functools.lru_cache(maxsize=None)
-def serving_program(ecfg: EstimatorConfig, serving: ServingMesh):
+def serving_program(ecfg: EstimatorConfig, serving: ServingMesh,
+                    quant: Optional[str] = None):
     """The jitted per-report-period program for one deployment.
 
     Returns ``fn(params, kpms, iq, alloc) -> (N,) Mbps``. The serving
@@ -109,12 +112,21 @@ def serving_program(ecfg: EstimatorConfig, serving: ServingMesh):
     ``constrain`` annotations bind to this deployment's mesh no matter
     when jit actually traces. Compiled once per input shape by jit's own
     cache; reused for every period.
-    """
+
+    ``quant="int8"`` serves the int8 forward on a ``quantize_estimator``
+    tree. GSPMD cannot partition a ``pallas_call``, so the mesh program
+    takes the jnp oracle form (``use_kernel=False``) — bit-identical to
+    the kernels, integer accumulation being exact (see
+    ``estimator.serve``)."""
+    check_quant(quant)
     mesh, overrides = serving.mesh, serving.rule_overrides()
 
     @jax.jit
     def fn(params, kpms, iq, alloc):
         with sh.use_rules(mesh, overrides):
+            if quant == "int8":
+                return estimator_forward_int8(ecfg, params, kpms, iq, alloc,
+                                              use_kernel=False)
             return estimator_forward(ecfg, params, kpms, iq, alloc)
 
     return fn
@@ -136,7 +148,9 @@ def replicate_params(serving: ServingMesh, params):
 
 def sharded_fleet_estimate(ecfg: EstimatorConfig, params, wins: np.ndarray,
                            iq: np.ndarray, alloc: np.ndarray,
-                           serving: ServingMesh, tp_clip) -> np.ndarray:
+                           serving: ServingMesh, tp_clip, *,
+                           quant: Optional[str] = None,
+                           window: Optional[int] = None) -> np.ndarray:
     """(N, T) Mbps: the mesh-sharded body of ``engine.estimate_fleet``.
 
     ``wins``: (N, T, WINDOW, 15) normalized KPM windows; ``iq``:
@@ -144,15 +158,27 @@ def sharded_fleet_estimate(ecfg: EstimatorConfig, params, wins: np.ndarray,
     are replicated onto the mesh once; each period's slice is committed
     with the ``batch`` sharding (``dist.sharding.put``) and run through
     the cached per-period program.
-    """
-    n, t_steps = wins.shape[0], wins.shape[1]
-    fn = serving_program(ecfg, serving)
+
+    ``window``: the fused-featurize form — ``wins`` is then the
+    (N, T + WINDOW, 15) *normalized trace* and period ``t``'s batch is the
+    ``wins[:, t:t+window]`` view, so the (N, T, WINDOW, 15) window tensor
+    is never materialized (same f32 elements, ~WINDOW x less memory).
+    ``quant="int8"`` quantizes the weights once and serves the int8
+    program (see ``serving_program``)."""
+    check_quant(quant)
+    n = wins.shape[0]
+    t_steps = iq.shape[1]
+    fn = serving_program(ecfg, serving, quant)
+    if quant == "int8":
+        # oracle quantizer: bit-identical to the kernel, and shardable
+        params = quantize_estimator(params, use_kernel=False)
     params_r = replicate_params(serving, params)
     with sh.use_rules(serving.mesh, serving.rule_overrides()):
         alloc_d = sh.put(jnp.asarray(alloc, jnp.float32), ("batch",))
         est = np.empty((n, t_steps))
         for t in range(t_steps):
-            kpms_t = sh.put(jnp.asarray(wins[:, t]), ("batch", None, None))
+            win_t = wins[:, t] if window is None else wins[:, t:t + window]
+            kpms_t = sh.put(jnp.asarray(win_t), ("batch", None, None))
             iq_t = sh.put(jnp.asarray(iq[:, t], jnp.float32),
                           ("batch", None, None, None))
             est[:, t] = np.clip(np.asarray(fn(params_r, kpms_t, iq_t,

@@ -1,0 +1,286 @@
+"""Report-period fusion kernels (PR 7): Pallas (interpret=True on CPU)
+vs jnp oracles for featurize / lstm / qmm / segsum, plus the contracts
+the sim layer leans on — host-path equality for the featurize windows,
+``lstm_branch`` equivalence for the LSTM scan, exact integer accumulation
+for the int8 matmuls, and ``jax.ops.segment_*`` semantics (masks, empty
+segments, dummy-id redirect) for the segment reductions. Property cases
+run through hypothesis when available, otherwise a fixed-seed sweep of
+the same checks (the suite's standard pattern)."""
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.channel import kpm as kpmmod
+from repro.channel import scenarios as sc
+from repro.estimator.model import (EstimatorConfig, init_estimator,
+                                   lstm_branch)
+from repro.kernels.featurize import featurize_ref, kpm_feature_windows
+from repro.kernels.lstm import (lstm_hidden, lstm_hidden_q, lstm_scan_q_ref,
+                                lstm_scan_ref)
+from repro.kernels.qmm import int8_matmul, qmm_ref, quantize_weight
+from repro.kernels.quant import quantize_ref
+from repro.kernels.segsum import segment_reduce
+
+F32 = jnp.float32
+
+
+def _kpm_trace(n, length, seed=0):
+    """Raw-KPM-scaled trace: values in the real columns' dynamic range so
+    the fixed normalize affine is exercised away from zero."""
+    rng = np.random.default_rng(seed)
+    return (np.asarray(kpmmod.KPM_CENTER)
+            + np.asarray(kpmmod.KPM_SCALE)
+            * rng.normal(size=(n, length, 15))).astype(np.float64)
+
+
+# ------------------------------------------------------------- featurize
+@pytest.mark.parametrize("n,length", [(4, 40), (7, 31), (130, 36)])
+def test_featurize_kernel_matches_ref(n, length):
+    """Kernel vs oracle over block-unaligned shapes (both dims padded)."""
+    x = jnp.asarray(_kpm_trace(n, length), F32)
+    c = jnp.asarray(kpmmod.KPM_CENTER, F32)
+    s = jnp.asarray(kpmmod.KPM_SCALE, F32)
+    got = kpm_feature_windows(x, c, s, 30)
+    ref = kpm_feature_windows(x, c, s, 30, use_kernel=False)
+    assert got.shape == (n, length - 29, 30, 15)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_featurize_matches_episode_windows():
+    """The device path reproduces ``EpisodeBatch.kpm_windows`` — the host
+    stride-trick program the fused engine path replaces."""
+    rng = np.random.default_rng(3)
+    ep = sc.gen_episode_batch(["none", "cci"], 5, rng, n_sc=16)
+    wins = ep.kpm_windows(normalize=True).astype(np.float32)
+    got = kpm_feature_windows(jnp.asarray(ep.kpms, F32),
+                              jnp.asarray(kpmmod.KPM_CENTER),
+                              jnp.asarray(kpmmod.KPM_SCALE), sc.WINDOW)
+    # window t covers trace steps [t, t + WINDOW) — same convention
+    np.testing.assert_allclose(np.asarray(got[:, :ep.n_steps]), wins,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_featurize_rejects_short_trace():
+    x = jnp.zeros((2, 10, 15), F32)
+    c = s = jnp.ones((15,), F32)
+    with pytest.raises(ValueError, match="holds no"):
+        kpm_feature_windows(x, c, s, 30)
+
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.settings(max_examples=10, deadline=None)
+    @hypothesis.given(n=st.integers(1, 40), extra=st.integers(0, 25),
+                      window=st.integers(2, 12), seed=st.integers(0, 999))
+    def test_featurize_shapes_property(n, extra, window, seed):
+        x = jnp.asarray(_kpm_trace(n, window + extra, seed), F32)
+        c = jnp.asarray(kpmmod.KPM_CENTER, F32)
+        s = jnp.asarray(kpmmod.KPM_SCALE, F32)
+        got = kpm_feature_windows(x, c, s, window)
+        ref = featurize_ref(x, c, s, window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+else:  # pragma: no cover - depends on environment
+    @pytest.mark.parametrize("n,extra,window,seed",
+                             [(1, 0, 2, 0), (17, 13, 7, 1), (40, 25, 12, 2)])
+    def test_featurize_shapes_property(n, extra, window, seed):
+        x = jnp.asarray(_kpm_trace(n, window + extra, seed), F32)
+        c = jnp.asarray(kpmmod.KPM_CENTER, F32)
+        s = jnp.asarray(kpmmod.KPM_SCALE, F32)
+        got = kpm_feature_windows(x, c, s, window)
+        ref = featurize_ref(x, c, s, window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------------ lstm
+def _lstm_params(k, h, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kx, kh = jax.random.split(key)
+    wx = jax.random.normal(kx, (k, 4 * h), F32) * 0.3
+    wh = jax.random.normal(kh, (h, 4 * h), F32) * 0.3
+    b = jnp.linspace(-0.5, 0.5, 4 * h, dtype=F32)
+    return wx, wh, b
+
+
+@pytest.mark.parametrize("bt,h", [((3, 30), 8), ((65, 12), 24), ((16, 7), 31)])
+def test_lstm_kernel_matches_ref(bt, h):
+    b_, t = bt
+    wx, wh, b = _lstm_params(15, h)
+    kpms = jax.random.normal(jax.random.PRNGKey(7), (b_, t, 15), F32)
+    got = lstm_hidden(kpms, wx, wh, b)
+    ref = lstm_hidden(kpms, wx, wh, b, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_lstm_matches_estimator_branch():
+    """``lstm_hidden(...) @ proj`` IS the estimator's temporal branch."""
+    e = EstimatorConfig(n_sc=16, lstm_hidden=8, hidden=8)
+    params = init_estimator(e, jax.random.PRNGKey(0))["lstm"]
+    kpms = jax.random.normal(jax.random.PRNGKey(1), (5, e.window, 15), F32)
+    got = lstm_hidden(kpms, params["wx"], params["wh"], params["b"])
+    np.testing.assert_allclose(np.asarray(got @ params["proj"]),
+                               np.asarray(lstm_branch(params, kpms)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b_,h", [(3, 8), (33, 16)])
+def test_lstm_int8_kernel_exact_vs_ref(b_, h):
+    """int8 scan: integer accumulation is exact, so kernel == oracle
+    bit-for-bit (same order of the same float ops around exact dots)."""
+    wx, wh, b = _lstm_params(15, h, seed=2)
+    wxq, wxs = quantize_weight(wx, use_kernel=False)
+    whq, whs = quantize_weight(wh, use_kernel=False)
+    kpms = jax.random.normal(jax.random.PRNGKey(3), (b_, 30, 15), F32)
+    got = lstm_hidden_q(kpms, wxq, wxs, whq, whs, b)
+    ref = lstm_scan_q_ref(kpms, wxq, wxs, whq, whs, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_lstm_int8_close_to_fp32():
+    """Quantization noise stays small on well-scaled weights."""
+    wx, wh, b = _lstm_params(15, 16, seed=4)
+    wxq, wxs = quantize_weight(wx, use_kernel=False)
+    whq, whs = quantize_weight(wh, use_kernel=False)
+    kpms = jax.random.normal(jax.random.PRNGKey(5), (8, 30, 15), F32)
+    q = lstm_hidden_q(kpms, wxq, wxs, whq, whs, b, use_kernel=False)
+    f = lstm_scan_ref(kpms, wx, wh, b)
+    assert float(jnp.abs(q - f).max()) < 0.15
+
+
+# ------------------------------------------------------------------- qmm
+@pytest.mark.parametrize("m,k,n", [(8, 15, 32), (100, 33, 17), (257, 64, 96)])
+def test_int8_matmul_kernel_exact_vs_ref(m, k, n):
+    km, kw = jax.random.split(jax.random.PRNGKey(11))
+    x = jax.random.normal(km, (m, k), F32)
+    w = jax.random.normal(kw, (k, n), F32) * 0.2
+    wq, sw = quantize_weight(w, use_kernel=False)
+    got = int8_matmul(x, wq, sw)
+    ref = int8_matmul(x, wq, sw, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # and the oracle is literally qmm_ref on the quantized operands
+    xq, sx = quantize_ref(x)
+    np.testing.assert_array_equal(np.asarray(ref),
+                                  np.asarray(qmm_ref(xq, sx, wq, sw)))
+
+
+def test_int8_matmul_close_to_fp32():
+    km, kw = jax.random.split(jax.random.PRNGKey(13))
+    x = jax.random.normal(km, (64, 48), F32)
+    w = jax.random.normal(kw, (48, 24), F32) * 0.1
+    wq, sw = quantize_weight(w, use_kernel=False)
+    err = np.abs(np.asarray(int8_matmul(x, wq, sw)) - np.asarray(x @ w))
+    assert float(err.max()) < 0.05
+
+
+# ---------------------------------------------------------------- segsum
+def _seg_case(t, n, c, seed, with_mask):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(t, n)).astype(np.float32)
+    g = rng.integers(0, c, (t, n)).astype(np.int32)
+    m = rng.random((t, n)) < 0.7 if with_mask else None
+    return v, g, m
+
+
+@pytest.mark.parametrize("op", ["sum", "max"])
+@pytest.mark.parametrize("t,n,c,with_mask",
+                         [(1, 16, 3, False), (5, 200, 7, True),
+                          (12, 1000, 5, True), (3, 33, 1, False)])
+def test_segment_reduce_matches_jax_ops(op, t, n, c, with_mask):
+    v, g, m = _seg_case(t, n, c, 0, with_mask)
+    got = segment_reduce(v, g, c, op=op, mask=m)
+    fn = jax.ops.segment_sum if op == "sum" else jax.ops.segment_max
+    gm = np.where(m, g, c) if m is not None else g
+    ref = np.stack([np.asarray(fn(jnp.asarray(v[i]), jnp.asarray(gm[i]),
+                                  num_segments=c + 1))[:c]
+                    for i in range(t)])
+    # tiled vs scatter accumulation order differs -> f32 rounding noise
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(segment_reduce(v, g, c, op=op, mask=m,
+                                  use_kernel=False)), ref,
+        rtol=1e-5, atol=1e-5)
+
+
+def test_segment_reduce_1d_and_broadcast_ids():
+    """1-D inputs and (N,) ids under (T, N) values both round-trip."""
+    v1 = np.arange(6, dtype=np.float32)
+    g1 = np.array([0, 1, 0, 2, 1, 0], np.int32)
+    np.testing.assert_allclose(
+        np.asarray(segment_reduce(v1, g1, 3)), [v1[[0, 2, 5]].sum(),
+                                                v1[[1, 4]].sum(), v1[3]])
+    v2 = np.stack([v1, v1 * 2])
+    got = segment_reduce(v2, g1, 3)  # ids broadcast over the batch dim
+    np.testing.assert_allclose(np.asarray(got)[1], np.asarray(got)[0] * 2)
+
+
+@pytest.mark.parametrize("op,identity", [("sum", 0.0), ("max", -np.inf)])
+def test_segment_reduce_empty_segments(op, identity):
+    """Untouched buckets take the op identity — jax.ops semantics, which
+    ``scheduler_step``'s empty-cell handling depends on."""
+    v = np.ones((2, 4), np.float32)
+    g = np.zeros((2, 4), np.int32)
+    out = np.asarray(segment_reduce(v, g, 3, op=op))
+    assert (out[:, 1:] == identity).all()
+
+
+def test_cell_load_and_coupling_kernel_match_host():
+    """``sim.cells`` consumers: the segsum-kernel aggregation reproduces
+    the host one-hot program for per-cell load and the (C, C)-coupled
+    interference floor."""
+    from repro.sim.cells import cell_load, coupled_interference_mw, \
+        ring_coupling
+    rng = np.random.default_rng(5)
+    n, t, c = 40, 9, 4
+    grid = rng.integers(0, c, (n, t))
+    demand = rng.uniform(0.05, 1.0, n)
+    np.testing.assert_allclose(
+        cell_load(grid, demand, c, use_kernel=True),
+        cell_load(grid, demand, c), rtol=1e-6, atol=1e-7)
+    coup = ring_coupling(c)
+    np.testing.assert_allclose(
+        coupled_interference_mw(grid, demand, coup, use_kernel=True),
+        coupled_interference_mw(grid, demand, coup), rtol=1e-6, atol=1e-9)
+    # a cell with no attached UEs reports zero load, not NaN
+    grid0 = np.zeros((n, t), np.int64)
+    load = cell_load(grid0, demand, 3, use_kernel=True)
+    assert np.isfinite(load).all() and (load[1:] == 0).all()
+
+
+def test_segment_reduce_mask_none_vs_all_true():
+    v, g, _ = _seg_case(4, 50, 6, 1, False)
+    a = segment_reduce(v, g, 6)
+    b = segment_reduce(v, g, 6, mask=np.ones_like(g, bool))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.settings(max_examples=10, deadline=None)
+    @hypothesis.given(t=st.integers(1, 9), n=st.integers(1, 300),
+                      c=st.integers(1, 8), seed=st.integers(0, 999),
+                      op=st.sampled_from(["sum", "max"]))
+    def test_segment_reduce_property(t, n, c, seed, op):
+        v, g, m = _seg_case(t, n, c, seed, True)
+        got = segment_reduce(v, g, c, op=op, mask=m)
+        ref = segment_reduce(v, g, c, op=op, mask=m, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+else:  # pragma: no cover - depends on environment
+    @pytest.mark.parametrize("t,n,c,seed,op",
+                             [(1, 1, 1, 0, "sum"), (9, 300, 8, 1, "max"),
+                              (4, 129, 5, 2, "sum")])
+    def test_segment_reduce_property(t, n, c, seed, op):
+        v, g, m = _seg_case(t, n, c, seed, True)
+        got = segment_reduce(v, g, c, op=op, mask=m)
+        ref = segment_reduce(v, g, c, op=op, mask=m, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)

@@ -1,0 +1,239 @@
+"""Engine-level pins for the PR 7 fused report-period path + int8 serving.
+
+Four contracts: (1) ``fused=True`` (device featurize + fused scan) tracks
+the host stride-trick program through ``estimate_fleet`` and
+``simulate_fleet`` — plain, scheduled, churn and online paths; (2)
+``quant="int8"`` serves within 1 Mbps RMSE of the fp32 forward and is
+refused under online adaptation; (3) the defaults (``quant=None,
+fused=False``) are bit-identical to the PR 6 engine program; (4) the int8
+replay ring adapts to drift like the fp32 ring (satellite: post-drift
+RMSE within tolerance)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.channel import scenarios as sc
+from repro.core.controller import ControllerConfig
+from repro.core.pso import LookupTable
+from repro.estimator.model import EstimatorConfig, init_estimator
+from repro.models.vgg import FULL, vgg_split_profile
+from repro.sim import (POLICIES, DriftConfig, OnlineConfig, SchedulerConfig,
+                       estimate_fleet, online_estimate_fleet, simulate_fleet)
+from repro.sim.cells import (attach_ring, build_cells_episode, handover_grid,
+                             ring_coupling, simulate_cells)
+
+N_SC_TEST = 16
+
+
+def tiny_estimator(seed: int = 0):
+    e = EstimatorConfig(n_sc=N_SC_TEST, lstm_hidden=8, hidden=8)
+    return e, init_estimator(e, jax.random.PRNGKey(seed))
+
+
+def episode(n: int, T: int = 6, seed: int = 5, **kw):
+    rng = np.random.default_rng(seed)
+    names = np.asarray(sc.SCENARIOS)[np.arange(n) % len(sc.SCENARIOS)]
+    return sc.gen_episode_batch(names, T, rng, n_sc=N_SC_TEST, **kw)
+
+
+def fig6_style_table(prof):
+    return LookupTable(ue_name="t", table=np.full(41, 3, np.int32),
+                       tp_min_mbps=np.zeros(len(prof.data_bytes)),
+                       feasible_prefilter=np.ones(len(prof.data_bytes),
+                                                  bool))
+
+
+@pytest.fixture(scope="module")
+def prof_table_cfg():
+    prof = vgg_split_profile(FULL)
+    return prof, fig6_style_table(prof), ControllerConfig(0.5, 2, 3)
+
+
+# ------------------------------------------------------ estimate_fleet
+def test_fused_estimate_matches_unfused():
+    """The fused featurize feeds the estimator the same windows the host
+    stride-trick path builds — the estimates agree to float tolerance."""
+    est = tiny_estimator()
+    ep = episode(8, T=5)
+    a = estimate_fleet(ep, est)
+    b = estimate_fleet(ep, est, fused=True)
+    np.testing.assert_allclose(b, a, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_needs_raw_kpms():
+    est = tiny_estimator()
+    ep = episode(4, T=4, include_kpms=False)
+    with pytest.raises(ValueError, match="raw KPM reports"):
+        estimate_fleet(ep, est, fused=True)
+
+
+def test_quant_mode_validated():
+    est = tiny_estimator()
+    ep = episode(2, T=3)
+    with pytest.raises(ValueError, match="quant must be one of"):
+        estimate_fleet(ep, est, quant="int4")
+
+
+def test_int8_estimate_within_1mbps_of_fp32():
+    """The serving-accuracy pin: int8 weights move the fleet estimate by
+    well under the paper's Mbps scale (same bound the benchmark gates)."""
+    est = tiny_estimator()
+    ep = episode(16, T=6)
+    f = estimate_fleet(ep, est)
+    q = estimate_fleet(ep, est, quant="int8")
+    rmse = float(np.sqrt(np.mean((q - f) ** 2)))
+    assert rmse < 1.0
+    # int8 composes with the fused featurize path
+    qf = estimate_fleet(ep, est, quant="int8", fused=True)
+    np.testing.assert_allclose(qf, q, rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------- simulate_fleet
+def test_simulate_fleet_fused_pins(prof_table_cfg):
+    prof, table, cfg = prof_table_cfg
+    est = tiny_estimator()
+    ep = episode(8, T=6)
+    u = simulate_fleet(ep, table, prof, cfg, estimator=est)
+    f = simulate_fleet(ep, table, prof, cfg, estimator=est, fused=True)
+    np.testing.assert_allclose(f.est_tp, u.est_tp, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(f.splits, u.splits)
+    np.testing.assert_array_equal(f.delay_s, u.delay_s)
+
+
+def test_simulate_fleet_int8_close(prof_table_cfg):
+    prof, table, cfg = prof_table_cfg
+    est = tiny_estimator()
+    ep = episode(8, T=6)
+    u = simulate_fleet(ep, table, prof, cfg, estimator=est)
+    q = simulate_fleet(ep, table, prof, cfg, estimator=est, quant="int8")
+    rmse = float(np.sqrt(np.mean((q.est_tp - u.est_tp) ** 2)))
+    assert rmse < 1.0
+
+
+def test_defaults_bit_identical_to_pr6(prof_table_cfg):
+    """quant=None, fused=False spelled out == the kwargs' defaults == the
+    PR 6 program (the new switches are strictly opt-in)."""
+    prof, table, cfg = prof_table_cfg
+    est = tiny_estimator()
+    ep = episode(8, T=5)
+    a = simulate_fleet(ep, table, prof, cfg, estimator=est)
+    b = simulate_fleet(ep, table, prof, cfg, estimator=est,
+                       quant=None, fused=False)
+    np.testing.assert_array_equal(a.est_tp, b.est_tp)
+    np.testing.assert_array_equal(a.splits, b.splits)
+    np.testing.assert_array_equal(a.energy_j, b.energy_j)
+
+
+# ------------------------------------------------- scheduler / coupling
+@pytest.mark.parametrize("policy", POLICIES)
+def test_sched_fused_allclose(policy, prof_table_cfg):
+    """SchedulerConfig(fused=True) — per-cell reductions through the
+    segsum kernel — reproduces the XLA segment_sum/segment_max scan."""
+    prof, table, cfg = prof_table_cfg
+    est = tiny_estimator()
+    rng = np.random.default_rng(2)
+    n, T, n_cells = 24, 6, 3
+    grid = handover_grid(attach_ring(n, n_cells), T + sc.WINDOW, 0.25, rng,
+                         n_cells=n_cells)
+    ep = build_cells_episode(
+        np.asarray(sc.SCENARIOS)[np.arange(n) % len(sc.SCENARIOS)], T,
+        rng, grid, coupling=ring_coupling(n_cells), n_sc=N_SC_TEST,
+        include_iq=True)
+    out = {}
+    for fused in (False, True):
+        scfg = SchedulerConfig(policy, pf_beta=0.3, fused=fused)
+        out[fused] = simulate_cells(ep, grid, table, prof, cfg,
+                                    sched=scfg, n_cells=n_cells,
+                                    estimator=est)
+    np.testing.assert_allclose(out[True].fleet.prb_share,
+                               out[False].fleet.prb_share,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out[True].fleet.est_tp,
+                               out[False].fleet.est_tp,
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(out[True].served_mbps,
+                               out[False].served_mbps,
+                               rtol=1e-5, atol=1e-4)
+
+
+# ----------------------------------------------------------------- churn
+def test_churn_fused_allclose(prof_table_cfg):
+    prof, table, cfg = prof_table_cfg
+    est = tiny_estimator()
+    rng = np.random.default_rng(19)
+    ccfg = sc.ChurnConfig(arrival_rate=2.0, mean_dwell=4.0, max_dwell=6)
+    schedule = sc.make_churn_schedule(ccfg, 12, rng)
+    scen = np.asarray(sc.SCENARIOS)[
+        np.arange(schedule.n_sessions) % len(sc.SCENARIOS)]
+    sessions = sc.gen_episode_batch(scen, schedule.max_dwell, rng,
+                                    n_sc=N_SC_TEST)
+    kw = dict(churn=schedule, capacity=6, estimator=est)
+    u = simulate_fleet(sessions, table, prof, cfg, **kw)
+    f = simulate_fleet(sessions, table, prof, cfg, fused=True, **kw)
+    np.testing.assert_array_equal(f.active, u.active)
+    np.testing.assert_allclose(f.est_tp, u.est_tp, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(f.splits, u.splits)
+    # int8 serving through the pool: same bound as the batch path
+    q = simulate_fleet(sessions, table, prof, cfg, quant="int8", **kw)
+    rmse = float(np.sqrt(np.mean((q.est_tp - u.est_tp) ** 2)))
+    assert rmse < 1.0
+
+
+# ---------------------------------------------------------------- online
+def test_online_fused_allclose(prof_table_cfg):
+    """The closed loop under the fused featurize path: same adaptation
+    schedule, estimates allclose (the ring ingests identical windows)."""
+    prof, table, cfg = prof_table_cfg
+    est = tiny_estimator()
+    ep = episode(8, T=8)
+    ocfg = OnlineConfig(capacity=64, batch=16, steps=4, min_fill=8,
+                        drift=DriftConfig(calibrate_periods=2,
+                                          threshold_mbps=0.0, patience=1,
+                                          cooldown=1))
+    u = simulate_fleet(ep, table, prof, cfg, estimator=est, online=ocfg)
+    f = simulate_fleet(ep, table, prof, cfg, estimator=est, online=ocfg,
+                       fused=True)
+    np.testing.assert_array_equal(f.online.adapted, u.online.adapted)
+    assert f.online.n_adaptations == u.online.n_adaptations > 0
+    np.testing.assert_allclose(f.est_tp, u.est_tp, rtol=1e-4, atol=1e-3)
+
+
+def test_online_refuses_int8_serving(prof_table_cfg):
+    prof, table, cfg = prof_table_cfg
+    est = tiny_estimator()
+    ep = episode(4, T=4)
+    with pytest.raises(ValueError, match="frozen estimator"):
+        simulate_fleet(ep, table, prof, cfg, estimator=est,
+                       online=OnlineConfig(), quant="int8")
+
+
+def test_int8_ring_adapts_like_fp32_ring():
+    """Satellite pin: the quantized replay ring closes the same drift the
+    fp32 ring does — identical adaptation schedule (the trigger cadence is
+    label-driven, not storage-driven) and post-drift RMSE within
+    tolerance, both beating the frozen estimator."""
+    e, params = tiny_estimator()
+    ep = episode(16, T=16, seed=9)
+    base = OnlineConfig(capacity=256, batch=64, steps=10, lr=3e-3,
+                        min_fill=16, seed=1,
+                        drift=DriftConfig(calibrate_periods=2,
+                                          threshold_mbps=0.0, patience=1,
+                                          cooldown=1))
+    frozen = estimate_fleet(ep, (e, params))
+    est_f, st_f = online_estimate_fleet(ep, (e, params), base)
+    est_q, st_q = online_estimate_fleet(
+        ep, (e, params), dataclasses.replace(base, ring_quant="int8"))
+    np.testing.assert_array_equal(st_q.adapted, st_f.adapted)
+    assert st_q.n_adaptations == st_f.n_adaptations > 0
+    tp = np.asarray(ep.tp_mbps, float)
+    late = slice(ep.n_steps // 2, None)
+
+    def rmse(x):
+        return float(np.sqrt(np.mean((x[:, late] - tp[:, late]) ** 2)))
+
+    r_f, r_q, r_z = rmse(est_f), rmse(est_q), rmse(frozen)
+    assert r_q < r_z and r_f < r_z  # both rings actually adapt
+    # quantized replay costs at most a modest accuracy margin
+    assert abs(r_q - r_f) < max(2.0, 0.25 * r_f)
