@@ -5,6 +5,7 @@
 #   make cells      — multi-cell scheduler smoke (64 UEs x 2 cells x 3 policies)
 #   make mesh       — mesh-sharded estimator serving smoke (sharded == unsharded)
 #   make online     — online-adaptation drift smoke (adapted beats frozen)
+#   make ssm        — SSM vs LSTM online head-to-head smoke (O(1) state)
 #   make churn      — slot-pool churn smoke (arrival/departure, no retraces)
 #   make fused      — fused-path + int8 smoke (profile breakdown, allclose)
 #   make dryrun     — AOT dry-run cell (1 arch x 1 shape on the 256-chip mesh)
@@ -13,7 +14,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke fleet cells mesh online churn fused dryrun docs-check ci
+.PHONY: test smoke fleet cells mesh online ssm churn fused dryrun docs-check ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -35,6 +36,10 @@ online:
 	$(PY) benchmarks/fleet.py --fast --online --sizes 128 --steps 20 \
 	  --json benchmarks/results/online_smoke.json
 
+ssm:
+	$(PY) benchmarks/fleet.py --fast --online --estimator ssm \
+	  --json benchmarks/results/ssm_smoke.json
+
 churn:
 	$(PY) benchmarks/fleet.py --fast --churn \
 	  --json benchmarks/results/churn_smoke.json
@@ -50,4 +55,4 @@ dryrun:
 docs-check:
 	$(PY) tools/docs_check.py
 
-ci: test smoke fleet cells mesh online churn fused dryrun docs-check
+ci: test smoke fleet cells mesh online ssm churn fused dryrun docs-check

@@ -55,11 +55,18 @@ fleet whose every UE jumps to an unseen interference regime mid-episode
 frozen vs online-adapted. Reports pre/post-drift estimator RMSE for
 both, the fig6-style delay/energy/privacy means, the UE-steps/s overhead
 of the closed loop, and the online=None bit-identity regression.
+``--online --estimator ssm`` runs the head-to-head instead: the
+recurrent SSM estimator (``repro.estimator.ssm``) next to the windowed
+LSTM on the SAME drift episode — pre/post-drift RMSE for both families
+(frozen and adapted), UE-steps/s, per-UE serving-state bytes (constant
+SSD state vs window + IQ inputs), the K-period forecast variant sharing
+the trained weights, and the persistence floor the forecasts must beat.
 
 Run:  PYTHONPATH=src python benchmarks/fleet.py [--fast] [--sizes 1 64 1024]
       PYTHONPATH=src python benchmarks/fleet.py --cells 4 --policy pf
       PYTHONPATH=src python benchmarks/fleet.py --mesh 4x2 --fast
       PYTHONPATH=src python benchmarks/fleet.py --online [--json out.json]
+      PYTHONPATH=src python benchmarks/fleet.py --online --estimator ssm
       PYTHONPATH=src python benchmarks/fleet.py --churn [--sizes 1024 4096]
       PYTHONPATH=src python benchmarks/fleet.py --profile [--json out.json]
 Also exposed as ``run(state)`` for benchmarks/run.py.
@@ -652,6 +659,52 @@ def profile_cell(n: int, T: int, est, prof, table, cfg, fixed, rng,
     return out
 
 
+def profile_ssm_step(n: int, t0) -> dict:
+    """O(1)-per-report evidence for the recurrent estimator: the wall
+    time of one ``ssm_step`` report after WINDOW vs 4x WINDOW reports of
+    history must be flat (the windowed path's featurize + forward re-read
+    WINDOW reports every period; the recurrent step has NO featurize
+    stage at all — one (N, 16) report row in, constant state updated)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.estimator.ssm import (SSMConfig, init_ssm, ssm_state_init,
+                                     ssm_step)
+    c = SSMConfig()
+    params = init_ssm(c, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    feats = jnp.asarray(rng.normal(size=(n, c.n_feats)), jnp.float32)
+
+    def one_report_after(history: int) -> float:
+        state = ssm_state_init(c, (n,))
+        for _ in range(history):
+            state, _ = ssm_step(c, params, state, feats)
+        jax.block_until_ready(state)
+
+        def step():
+            jax.block_until_ready(ssm_step(c, params, state, feats)[0])
+
+        step()  # warm (same program for every history length)
+        return _best_of(step, reps=3)
+
+    dt_short = one_report_after(WINDOW)
+    dt_long = one_report_after(4 * WINDOW)
+    ratio = dt_long / dt_short
+    out = {"n": n, "step_ms_after_window": dt_short * 1e3,
+           "step_ms_after_4x_window": dt_long * 1e3,
+           "history_cost_ratio": ratio,
+           "state_bytes_per_ue": c.state_bytes(),
+           # generous bound: O(WINDOW) work would show up as ~4x
+           "o1_flat": ratio < 2.0}
+    record(f"profile/ssm_step_n{n}", t0,
+           f"step_ms_after_window={dt_short * 1e3:.2f};"
+           f"step_ms_after_4x_window={dt_long * 1e3:.2f};"
+           f"history_cost_ratio={ratio:.2f};"
+           f"state_bytes_per_ue={c.state_bytes()};"
+           f"featurize_stage=none;o1_flat={out['o1_flat']}")
+    return out
+
+
 def _churn_baseline():
     """(best committed churn_smoke rate in UE-steps/s, its machine config)
     — the before-record the fused per-period path is compared against."""
@@ -689,19 +742,23 @@ def run_profile(state: dict, sizes=None, T: int | None = None) -> bool:
            f"baseline_rate={(base_rate or 0):.0f};"
            f"baseline_cpu_count={base_cfg.get('cpu_count')};"
            f"speedup_vs_baseline_x={(ratio or 0):.2f}")
+    ssm_step_prof = profile_ssm_step(sizes[0], t0)
     state["profile"] = {"cells": cells, "churn": churn,
                         "churn_baseline_rate": base_rate,
-                        "churn_speedup_vs_baseline": ratio}
+                        "churn_speedup_vs_baseline": ratio,
+                        "ssm_step": ssm_step_prof}
     ok_close = all(c["allclose"] for c in cells)
     # the speed gates only bind on the full-size run: FAST smokes assert
     # correctness, not machine-dependent timings
     ok_speed = FAST or all(c["speedup_fused"] >= 1.5 for c in cells)
     ok_churn = FAST or ratio is None or ratio >= 1.5
+    ok_ssm_o1 = FAST or ssm_step_prof["o1_flat"]
     record("profile/claims", t0,
            f"allclose={ok_close};fused_speedup>=1.5x={ok_speed};"
            f"churn_vs_baseline>=1.5x={ok_churn};"
+           f"ssm_step_o1_flat={ok_ssm_o1};"
            f"sizes={'/'.join(str(s) for s in sizes)}")
-    return ok_close and ok_speed and ok_churn
+    return ok_close and ok_speed and ok_churn and ok_ssm_o1
 
 
 DRIFT_PRE = ("none", "cci")  # the estimator's offline training world
@@ -816,6 +873,158 @@ def run_online(state: dict, sizes=None, T: int | None = None) -> bool:
     return ok_noop and ok_beat and ok_adapt
 
 
+# ------------------------------------------------- SSM online head-to-head
+SSM_FORECAST_K = 3  # K-period forecast variant of the head-to-head
+
+
+def ssm_online_estimator(steps: int, n_sc: int):
+    """Recurrent estimator trained offline on the pre-drift distribution
+    (teacher-forced sequence training, ``estimator.train.train_ssm``) —
+    the SSM twin of :func:`online_estimator`, same train-once regime and
+    the same information set (``include_iq=True``: the per-period IQ
+    snapshot as instantaneous summary channels)."""
+    from repro.estimator.ssm import SSMConfig, episode_features
+    from repro.estimator.train import train_ssm
+    c = SSMConfig(include_iq=True)
+    rng = np.random.default_rng(0)
+    n_eps = 48 if FAST else 96
+    scen = np.asarray(DRIFT_PRE, object)[np.arange(n_eps) % len(DRIFT_PRE)]
+    ep = gen_episode_batch(scen, 20, rng, include_iq=True, n_sc=n_sc)
+    data = {"feats": episode_features(ep.kpms, ep.alloc_ratio, ep.iq),
+            "tp": np.asarray(ep.tp_mbps, np.float32)}
+    params, _, _ = train_ssm(c, data, steps=steps, batch=32, lr=3e-3, seed=0)
+    return c, params
+
+
+def _lstm_serving_bytes_per_ue(e) -> int:
+    """Per-UE estimator inputs one report period re-reads on the windowed
+    path: the (WINDOW, 15) KPM window plus the (2, n_sc, 14) IQ
+    spectrogram, f32 — the footprint the SSM's constant state replaces."""
+    return (WINDOW * 15 + 2 * e.n_sc * 14) * 4
+
+
+def _family_cell(name: str, est, ep, ocfg, prof, table, cfg, fixed,
+                 pre: slice, post: slice) -> dict:
+    """Frozen + online runs of one estimator family on a shared episode."""
+    n, T = ep.n_ues, ep.n_steps
+    kw = dict(estimator=est, fixed_split=fixed)
+    simulate_fleet(ep, table, prof, cfg, **kw)  # warm
+    t1 = time.perf_counter()
+    frozen = simulate_fleet(ep, table, prof, cfg, **kw)
+    dt_frz = time.perf_counter() - t1
+    simulate_fleet(ep, table, prof, cfg, online=ocfg, **kw)  # warm
+    t2 = time.perf_counter()
+    onl = simulate_fleet(ep, table, prof, cfg, online=ocfg, **kw)
+    dt_onl = time.perf_counter() - t2
+    return {"rate": n * T / dt_onl, "rate_frozen": n * T / dt_frz,
+            "rmse_pre_frozen": _rmse(frozen, pre),
+            "rmse_post_frozen": _rmse(frozen, post),
+            "rmse_pre_online": _rmse(onl, pre),
+            "rmse_post_online": _rmse(onl, post),
+            "n_adaptations": onl.online.n_adaptations,
+            "train_steps": onl.online.train_steps}
+
+
+def online_ssm_cell(n: int, T: int, lstm, ssm, prof, table, cfg, fixed,
+                    t0) -> dict:
+    """One fleet size through the SAME drift episode for both families,
+    plus the forecast variant and the persistence floor."""
+    import dataclasses
+
+    from repro.estimator.baselines import persistence_rmse
+    rng = np.random.default_rng(13)
+    ep = gen_episode_batch(drift_grid(n, T), T, rng, include_iq=True,
+                           n_sc=lstm[0].n_sc)
+    pre, post = slice(0, T // 2), slice(T // 2, None)
+    # shared monitor, tighter ratio than the plain --online sweep: the
+    # IQ-aware recurrent family degrades far less under this drift (it
+    # sees jamming directly), so 1.5x the calibrated baseline would
+    # rarely arm for it — 1.2x catches the smaller, real error growth
+    # both families show while staying above pre-drift noise
+    ocfg = OnlineConfig(
+        capacity=min(4 * n, 8192), batch=256, steps=25, lr=3e-3,
+        min_fill=min(n, 256),
+        drift=DriftConfig(alpha=0.5, calibrate_periods=4, ratio=1.2,
+                          patience=2, cooldown=2))
+    # wall-clock-matched adaptation budgets, not step-matched: one SSM
+    # replay step trains on feature rows through the O(1) recurrence
+    # (~an order of magnitude cheaper than the LSTM's window re-read +
+    # CNN step, cf. the serving rates in this record), so the same
+    # burst wall-time buys a 6x longer schedule
+    ocfg_ssm = dataclasses.replace(ocfg, steps=6 * ocfg.steps)
+    out = {"n": n,
+           "state_bytes_per_ue_ssm": ssm[0].state_bytes(),
+           "state_bytes_per_ue_lstm": _lstm_serving_bytes_per_ue(lstm[0])}
+    for name, est, oc in (("lstm", lstm, ocfg), ("ssm", ssm, ocfg_ssm)):
+        out[name] = _family_cell(name, est, ep, oc, prof, table, cfg,
+                                 fixed, pre, post)
+    # the K-period forecast variant shares the trained SSM weights: only
+    # the (config-static) rollout horizon and reduce policy change
+    c, params = ssm
+    cfc = dataclasses.replace(c, forecast_horizon=SSM_FORECAST_K,
+                              forecast_policy="min")
+    est_fc = estimate_fleet(ep, (cfc, params))
+    true = np.asarray(ep.tp_mbps, float)
+    out["rmse_forecast_min"] = float(np.sqrt(np.mean(
+        (est_fc - true) ** 2)))
+    out["persistence_floor"] = persistence_rmse(true, horizon=1)
+    s, l = out["ssm"], out["lstm"]
+    record(f"online_ssm/n{n}", t0,
+           f"ssm_ue_steps_per_sec={s['rate']:.0f};"
+           f"lstm_ue_steps_per_sec={l['rate']:.0f};"
+           f"ssm_rmse_pre={s['rmse_pre_online']:.1f};"
+           f"ssm_rmse_post={s['rmse_post_online']:.1f};"
+           f"lstm_rmse_pre={l['rmse_pre_online']:.1f};"
+           f"lstm_rmse_post={l['rmse_post_online']:.1f};"
+           f"ssm_rmse_post_frozen={s['rmse_post_frozen']:.1f};"
+           f"lstm_rmse_post_frozen={l['rmse_post_frozen']:.1f};"
+           f"ssm_adaptations={s['n_adaptations']};"
+           f"lstm_adaptations={l['n_adaptations']};"
+           f"adapt_steps_per_burst_lstm={ocfg.steps};"
+           f"adapt_steps_per_burst_ssm={ocfg_ssm.steps};"
+           f"state_bytes_per_ue_ssm={out['state_bytes_per_ue_ssm']};"
+           f"state_bytes_per_ue_lstm={out['state_bytes_per_ue_lstm']};"
+           f"rmse_forecast_min_K{SSM_FORECAST_K}="
+           f"{out['rmse_forecast_min']:.1f};"
+           f"persistence_floor={out['persistence_floor']:.1f}")
+    return out
+
+
+def run_online_ssm(state: dict, sizes=None, T: int | None = None) -> bool:
+    """The recurrent-vs-windowed drift head-to-head."""
+    t0 = time.time()
+    prof = _vgg_profile(state)
+    table, cfg, fixed = fig6_adaptive.fig6_table(prof)
+    n_sc = 32 if FAST else 64
+    lstm = online_estimator(n_sc, steps=400 if FAST else 600)
+    # the recurrent trainer needs a longer schedule for parity: each step
+    # costs a fraction of the LSTM's (no IQ conv, no window re-reads)
+    ssm = ssm_online_estimator(steps=1500 if FAST else 3000, n_sc=n_sc)
+    sizes = sizes or ([256] if FAST else [1024])
+    T = T or (20 if FAST else 40)
+    cells = [online_ssm_cell(n, T, lstm, ssm, prof, table, cfg, fixed, t0)
+             for n in sizes]
+    state["ssm"] = cells
+    ok_adapt = all(c["ssm"]["n_adaptations"] > 0 for c in cells)
+    ok_beat_self = all(c["ssm"]["rmse_post_online"]
+                       < c["ssm"]["rmse_post_frozen"] for c in cells)
+    # state footprint: the constant SSD state must undercut the windowed
+    # inputs a period re-reads
+    ok_bytes = all(c["state_bytes_per_ue_ssm"]
+                   < c["state_bytes_per_ue_lstm"] for c in cells)
+    # the head-to-head gate binds on the full run only: FAST smokes
+    # assert the loop works, not tiny-budget accuracy ordering
+    ok_h2h = FAST or all(c["ssm"]["rmse_post_online"]
+                         <= c["lstm"]["rmse_post_online"] for c in cells)
+    record("online_ssm/claims", t0,
+           f"ssm_adaptations_ran={ok_adapt};"
+           f"ssm_online_beats_frozen={ok_beat_self};"
+           f"ssm_post_rmse<=lstm={ok_h2h};"
+           f"state_bytes_ssm<lstm={ok_bytes};max_fleet={max(sizes)};"
+           f"drift={'/'.join(DRIFT_PRE)}->{'/'.join(DRIFT_POST)}")
+    return ok_adapt and ok_beat_self and ok_bytes and ok_h2h
+
+
 def run(state: dict, sizes=None, T: int | None = None) -> bool:
     t0 = time.time()
     prof = _vgg_profile(state)
@@ -854,6 +1063,10 @@ def main() -> int:
     ap.add_argument("--online", action="store_true",
                     help="run the drift sweep: frozen vs drift-triggered "
                     "online estimator adaptation (repro.sim.online)")
+    ap.add_argument("--estimator", default="lstm", choices=["lstm", "ssm"],
+                    help="estimator family for --online: the windowed "
+                    "LSTM sweep (default), or the recurrent-SSM "
+                    "head-to-head against it (repro.estimator.ssm)")
     ap.add_argument("--profile", action="store_true",
                     help="profile the per-period fleet step: per-stage "
                     "wall-time breakdown (featurize/estimator/PSO query/"
@@ -887,8 +1100,12 @@ def main() -> int:
         label = "profile sweep"
     elif args.online:
         T = args.steps or (20 if (FAST or args.fast) else 40)
-        ok = run_online(state, sizes=args.sizes, T=T)
-        label = "online sweep"
+        if args.estimator == "ssm":
+            ok = run_online_ssm(state, sizes=args.sizes, T=T)
+            label = "ssm online head-to-head"
+        else:
+            ok = run_online(state, sizes=args.sizes, T=T)
+            label = "online sweep"
     elif args.churn:
         T = args.steps or (20 if (FAST or args.fast) else 40)
         ok = run_churn(state, sizes=args.sizes, fracs=args.churn_fracs, T=T)
@@ -907,6 +1124,7 @@ def main() -> int:
     if args.json:
         write_json(args.json, {"mesh": state.get("mesh"),
                                "online": state.get("online"),
+                               "ssm": state.get("ssm"),
                                "churn": state.get("churn"),
                                "profile": state.get("profile"), "ok": ok})
     print(f"# {label} {'OK' if ok else 'FAILED'}", flush=True)

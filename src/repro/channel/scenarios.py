@@ -99,14 +99,32 @@ class EpisodeBatch:
     def n_steps(self) -> int:
         return self.tp_mbps.shape[1]
 
-    def kpm_windows(self, normalize: bool = True) -> np.ndarray:
+    def kpm_windows(self, normalize: bool = True,
+                    method: str = "view") -> np.ndarray:
         """(N, T, WINDOW, 15) rolling estimator windows: step t sees the
-        WINDOW reports strictly before trace position ``WINDOW + t``."""
+        WINDOW reports strictly before trace position ``WINDOW + t``.
+
+        ``method="view"`` (default) is the zero-copy stride-trick form:
+        a non-contiguous, non-writable view whose window axis aliases the
+        trace axis — cheap, but it pins the trace's buffer layout (a
+        consumer that assumes C-contiguity, writes in place, or hands the
+        strides to foreign code gets silent corruption).
+        ``method="gather"`` is the contiguity-safe fancy-index form: a
+        fresh C-contiguous, writable array, WINDOW x the memory. The two
+        are bit-equal element-for-element
+        (``tests/test_channel_shims.py``); pick by what downstream does
+        with the buffer, not by the numbers."""
         if self.kpms is None:
             raise ValueError("episode was generated with include_kpms=False")
         k = kpmmod.normalize_kpms(self.kpms) if normalize else self.kpms
-        win = np.lib.stride_tricks.sliding_window_view(k, WINDOW, axis=1)
-        return win.transpose(0, 1, 3, 2)[:, :self.n_steps]
+        if method == "view":
+            win = np.lib.stride_tricks.sliding_window_view(k, WINDOW, axis=1)
+            return win.transpose(0, 1, 3, 2)[:, :self.n_steps]
+        if method == "gather":
+            t_idx = (np.arange(self.n_steps)[:, None]
+                     + np.arange(WINDOW)[None, :])  # (T, WINDOW)
+            return np.ascontiguousarray(k[:, t_idx])
+        raise ValueError(f"method must be 'view' or 'gather': {method!r}")
 
 
 def gen_episode_batch(scenarios, T: int, rng: np.random.Generator,

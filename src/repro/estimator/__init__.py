@@ -1,1 +1,1 @@
-from repro.estimator import baselines, model, train  # noqa: F401
+from repro.estimator import baselines, model, ssm, train  # noqa: F401

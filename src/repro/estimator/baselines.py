@@ -40,6 +40,26 @@ def ridge_predict(w: np.ndarray, X: np.ndarray) -> np.ndarray:
     return Xb @ w
 
 
+def constant_floor(ytr: np.ndarray, yte: np.ndarray) -> float:
+    """RMSE of the train-mean constant predictor — the floor any learned
+    estimator must beat for its Table II row to mean anything."""
+    ytr, yte = np.asarray(ytr, float), np.asarray(yte, float)
+    return float(np.sqrt(np.mean((yte - ytr.mean()) ** 2)))
+
+
+def persistence_rmse(tp: np.ndarray, horizon: int = 1) -> float:
+    """RMSE of the persistence predictor ``est_t = tp_{t-horizon}`` over
+    an (N, T) throughput trace (first ``horizon`` periods skipped — no
+    prediction exists there). The naive *temporal* floor the recurrent
+    estimator's K-period forecasts are judged against: a forecaster that
+    can't beat "tomorrow equals today" isn't forecasting."""
+    tp = np.asarray(tp, float)
+    if horizon < 1 or horizon >= tp.shape[1]:
+        raise ValueError(f"horizon must be in [1, T): {horizon}")
+    err = tp[:, horizon:] - tp[:, :-horizon]
+    return float(np.sqrt(np.mean(err ** 2)))
+
+
 def mlp_fit_predict(Xtr, ytr, Xte, *, hidden: int = 64, steps: int = 400,
                     seed: int = 0):
     """2-layer MLP regressor (the stronger non-tree baseline)."""

@@ -21,6 +21,8 @@ import numpy as np
 from repro.dist import sharding as sh
 from repro.estimator.model import (EstimatorConfig, estimator_forward,
                                    init_estimator)
+from repro.estimator.ssm import (SSMConfig, init_ssm, ssm_forward_seq,
+                                 ssm_step)
 from repro.optim import AdamW
 
 F32 = jnp.float32
@@ -28,6 +30,11 @@ F32 = jnp.float32
 # the four fields every estimator batch carries (gen_dataset also emits
 # "scenario", which is metadata, not a model input)
 BATCH_KEYS = ("kpms", "iq", "alloc", "tp")
+
+# the recurrent estimator's replay rows: the pre-report state, the report
+# features, and the label (truncated-BPTT-1 — the stored state is a
+# constant, gradients flow through the one stored step)
+SSM_BATCH_KEYS = ("state", "feats", "tp")
 
 
 def r2_rmse(pred: np.ndarray, y: np.ndarray) -> tuple[float, float]:
@@ -138,6 +145,125 @@ def train_estimator(e: EstimatorConfig, data: dict, *, steps: int = 300,
         pred = predict(e, params, eval_data)
         metrics = r2_rmse(pred, eval_data["tp"])
     return params, history, metrics
+
+
+# ------------------------------------------------- recurrent (SSM) paths
+def ssm_step_loss(c: SSMConfig, params, batch):
+    """MSE (Mbps^2) of one stored-state replay step (the online loss).
+
+    Each replay row carries the recurrent state *as it was* before the
+    report — a constant under the gradient, so adaptation backprops
+    through exactly one recurrence step (truncated BPTT, length 1). That
+    is what keeps an online burst O(batch), independent of how much
+    history each UE's state has absorbed."""
+    _, fc = ssm_step(c, params, jax.lax.stop_gradient(batch["state"]),
+                     batch["feats"])
+    return jnp.mean((fc[..., 0] - batch["tp"]) ** 2)
+
+
+def make_indexed_step_ssm(c: SSMConfig, opt: AdamW, *, mesh=None,
+                          overrides=None):
+    """:func:`make_indexed_step` for the recurrent estimator.
+
+    Same contract — ``step(params, opt_state, data, idx, key) ->
+    (params, opt_state, loss)`` with the minibatch gather inside the
+    compiled program — over :data:`SSM_BATCH_KEYS`; ``key`` is accepted
+    and ignored (the SSM forward has no dropout) so the online trainer
+    drives both estimator families through one calling convention. The
+    int8 ``(q, scales)`` ring form is not supported for recurrent rows:
+    quantizing stored states would perturb every replayed gradient.
+    """
+    def _step(params, opt_state, data, idx, key):
+        del key
+        batch = {k: jnp.take(data[k], idx, axis=0) for k in SSM_BATCH_KEYS}
+        loss, grads = jax.value_and_grad(
+            lambda p: ssm_step_loss(c, p, batch))(params)
+        params, opt_state, _ = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    if mesh is None:
+        return jax.jit(_step)
+    ov = dict(overrides or {})
+
+    @jax.jit
+    def sharded_step(params, opt_state, data, idx, key):
+        with sh.use_rules(mesh, ov):
+            return _step(params, opt_state, data, idx, key)
+
+    return sharded_step
+
+
+def ssm_seq_loss(c: SSMConfig, params, batch):
+    """Teacher-forced sequence MSE: the whole (B, S) report trace runs
+    through one chunked ``ssd_mixer`` pass and the labels sit on the
+    last ``T`` steps (``S - T`` warmup reports precede the first label —
+    the same WINDOW-offset convention the fleet engine reads estimates
+    with)."""
+    fc, _ = ssm_forward_seq(c, params, batch["feats"])
+    t = batch["tp"].shape[1]
+    off = batch["feats"].shape[1] - t
+    return jnp.mean((fc[:, off - 1:off - 1 + t, 0] - batch["tp"]) ** 2)
+
+
+def make_indexed_seq_step(c: SSMConfig, opt: AdamW):
+    """Offline sequence-training step: gather whole UE traces by index
+    inside jit (the sequence twin of :func:`make_indexed_step`)."""
+    @jax.jit
+    def step(params, opt_state, data, idx):
+        batch = {k: jnp.take(data[k], idx, axis=0)
+                 for k in ("feats", "tp")}
+        loss, grads = jax.value_and_grad(
+            lambda p: ssm_seq_loss(c, p, batch))(params)
+        params, opt_state, _ = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return step
+
+
+def train_ssm(c: SSMConfig, data: dict, *, steps: int = 300,
+              batch: int = 32, lr: float = 1e-3, seed: int = 0,
+              log_every: int = 50, eval_data: dict | None = None):
+    """Offline teacher-forced trainer for the recurrent estimator.
+
+    ``data``: ``{"feats": (M, S, F), "tp": (M, T)}`` — per-UE report
+    traces (``repro.estimator.ssm.episode_features``) and their last-T
+    throughput labels. Mirrors :func:`train_estimator` (device-resident
+    dataset, indexed gather, AdamW) so benchmark code swaps families by
+    swapping the trainer."""
+    params = init_ssm(c, jax.random.PRNGKey(seed))
+    opt = AdamW(lr=lr, weight_decay=1e-4, clip_norm=1.0)
+    opt_state = opt.init(params)
+    step_fn = make_indexed_seq_step(c, opt)
+    n = len(data["tp"])
+    rng = np.random.default_rng(seed)
+    data_dev = {k: jnp.asarray(data[k]) for k in ("feats", "tp")}
+    history = []
+    for i in range(steps):
+        idx = rng.integers(0, n, batch)
+        params, opt_state, loss = step_fn(params, opt_state, data_dev,
+                                          jnp.asarray(idx, jnp.int32))
+        if i % log_every == 0 or i == steps - 1:
+            history.append((i, float(loss)))
+    metrics = None
+    if eval_data is not None:
+        pred = ssm_predict(c, params, eval_data)
+        metrics = r2_rmse(pred, eval_data["tp"])
+    return params, history, metrics
+
+
+def ssm_predict(c: SSMConfig, params, data: dict,
+                batch: int | None = 64) -> np.ndarray:
+    """(M, T) predicted Mbps for every trace row of ``data`` (sequence
+    mode, labels-aligned tail — the eval twin of :func:`predict`)."""
+    outs = []
+    n, t = len(data["tp"]), data["tp"].shape[1]
+    off = data["feats"].shape[1] - t
+    batch = max(n, 1) if batch is None else batch
+    for i in range(0, n, batch):
+        fc, _ = ssm_forward_seq(c, params,
+                                jnp.asarray(data["feats"][i:i + batch]))
+        outs.append(np.asarray(fc[:, off - 1:off - 1 + t, 0]))
+    return np.concatenate(outs)
 
 
 @partial(jax.jit, static_argnums=0)

@@ -1,3 +1,3 @@
 from repro.kernels.ssd.kernel import ssd  # noqa: F401
-from repro.kernels.ssd.ops import ssd_mixer  # noqa: F401
-from repro.kernels.ssd.ref import ssd_ref  # noqa: F401
+from repro.kernels.ssd.ops import ssd_mixer, ssd_step  # noqa: F401
+from repro.kernels.ssd.ref import ssd_ref, ssd_step_ref  # noqa: F401

@@ -39,7 +39,9 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, sout_ref, s_ref,
     decay = lcum[:, None, :] - lcum[None, :, :]  # (t, s, hpg)
     tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= (
         jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
-    M = jnp.where(tri[..., None], jnp.exp(decay), 0.0) * CB[..., None]
+    # mask before exp (matches ref.py): keeps the masked upper triangle
+    # from overflowing exp and poisoning gradients through the where().
+    M = jnp.exp(jnp.where(tri[..., None], decay, -jnp.inf)) * CB[..., None]
     du = dt[:, :, None] * x  # (L, hpg, hd)
     y_intra = jnp.einsum("tsh,shd->thd", M, du, preferred_element_type=F32)
     # inter-chunk: contribution of the carried state

@@ -7,12 +7,37 @@ Inputs are the post-projection, post-conv tensors of one sequence:
   Bm (B, S, G, N)     input-expansion vectors (ngroups G)
   Cm (B, S, G, N)     output-contraction vectors
 Output: y (B, S, nh, hd) and final state (B, G, nh//G, hd, N).
+
+``ssd_step_ref`` is the same recurrence specialised to one timestep with
+an explicit carried state — the O(1) ingest form a recurrent estimator
+serves (``repro.estimator.ssm``): scanning it over S steps from a zero
+state reproduces ``ssd_ref``'s outputs and final state (pinned by
+``tests/test_kernels.py``).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 F32 = jnp.float32
+
+
+def ssd_step_ref(x_t, dt_t, A, B_t, C_t, state):
+    """One SSD recurrence step: S' = exp(dt*A) * S + dt * (B (x) x).
+
+    ``x_t`` (B, nh, hd); ``dt_t`` (B, nh); ``A`` (nh,); ``B_t``/``C_t``
+    (B, G, N); ``state`` (B, G, nh//G, hd, N) — the chunk kernel's
+    carried-state layout, so a sequence pass's final state resumes here
+    directly. Returns (y_t (B, nh, hd), new state)."""
+    b, nh, hd = x_t.shape
+    G, N = B_t.shape[1], B_t.shape[2]
+    hpg = nh // G
+    dA = (dt_t.astype(F32) * A.astype(F32)).reshape(b, G, hpg)
+    du = (dt_t.astype(F32)[..., None] * x_t.astype(F32)
+          ).reshape(b, G, hpg, hd)
+    state = (state.astype(F32) * jnp.exp(dA)[..., None, None]
+             + jnp.einsum("bgn,bghd->bghdn", B_t.astype(F32), du))
+    y = jnp.einsum("bgn,bghdn->bghd", C_t.astype(F32), state)
+    return y.reshape(b, nh, hd).astype(x_t.dtype), state
 
 
 def ssd_ref(x, dt, A, Bm, Cm, chunk: int):
@@ -32,7 +57,12 @@ def ssd_ref(x, dt, A, Bm, Cm, chunk: int):
     decay = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]  # (B,nc,t,s,nh)
     decay = jnp.transpose(decay, (0, 1, 4, 2, 3))
     tri = jnp.tril(jnp.ones((L, L), bool))
-    M = jnp.where(tri, jnp.exp(decay), 0.0).reshape(B, nc, G, hpg, L, L)
+    # mask BEFORE exp: the upper triangle holds +(lcum[s]-lcum[t]) which
+    # overflows exp once training grows dt, and inf in the discarded
+    # branch of a where() poisons the backward pass (inf * 0 = nan).
+    # exp(-inf) = 0 keeps both the value and the gradient finite.
+    M = jnp.exp(jnp.where(tri, decay, -jnp.inf)
+                ).reshape(B, nc, G, hpg, L, L)
     M = M * CB[:, :, :, None]
     du = dtc.reshape(B, nc, L, G, hpg)[..., None] * xc
     y_intra = jnp.einsum("bcghts,bcsghd->bctghd", M, du)

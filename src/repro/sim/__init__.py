@@ -8,24 +8,27 @@ from repro.sim.engine import (FleetResult, TP_CLIP_MBPS, emit_period_samples,
                               simulate_fleet, simulate_fleet_looped,
                               split_metrics)
 from repro.sim.online import (DriftConfig, DriftState, OnlineConfig,
-                              OnlineStats, ReplayBuffer, buffer_add,
-                              buffer_add_masked, buffer_count, buffer_data,
-                              buffer_init, drift_init, drift_step,
-                              drift_threshold, online_estimate_fleet,
-                              online_step_program)
+                              OnlineStats, ReplayBuffer, ReplayBufferSSM,
+                              buffer_add, buffer_add_masked, buffer_add_ssm,
+                              buffer_count, buffer_data, buffer_init,
+                              drift_init, drift_step, drift_threshold,
+                              online_estimate_fleet, online_step_program)
 from repro.sim.pool import (LifecycleStats, PoolPrograms, PoolState,
                             pool_init, pool_programs, simulate_pool)
 from repro.sim.sched import (POLICIES, SchedulerConfig, SchedulerState,
                              cell_shares, scheduler_init, scheduler_step)
 from repro.sim.serving import (ServingMesh, make_serving_mesh,
                                replicate_params, serving_program,
-                               sharded_fleet_estimate)
+                               sharded_fleet_estimate,
+                               sharded_ssm_estimate, ssm_serving_program)
 
 __all__ = ["CellsResult", "DriftConfig", "DriftState", "FleetResult",
            "LifecycleStats", "OnlineConfig", "OnlineStats", "POLICIES",
-           "PoolPrograms", "PoolState", "ReplayBuffer", "SchedulerConfig",
+           "PoolPrograms", "PoolState", "ReplayBuffer", "ReplayBufferSSM",
+           "SchedulerConfig",
            "SchedulerState", "ServingMesh", "TP_CLIP_MBPS", "attach_ring",
-           "buffer_add", "buffer_add_masked", "buffer_count", "buffer_data",
+           "buffer_add", "buffer_add_masked", "buffer_add_ssm",
+           "buffer_count", "buffer_data",
            "buffer_init", "build_cells_episode", "cell_load", "cell_shares",
            "coupled_interference_mw", "drift_init", "drift_step",
            "drift_threshold", "emit_period_samples", "estimate_fleet",
@@ -34,5 +37,6 @@ __all__ = ["CellsResult", "DriftConfig", "DriftState", "FleetResult",
            "pool_programs", "replicate_params", "ring_coupling",
            "run_controllers", "run_scheduled", "scheduler_init",
            "scheduler_step", "serving_program", "sharded_fleet_estimate",
+           "sharded_ssm_estimate", "ssm_serving_program",
            "simulate_cells", "simulate_fleet", "simulate_fleet_looped",
            "simulate_pool", "split_metrics"]

@@ -39,10 +39,13 @@ from repro.core.profiles import SplitProfile
 # the estimator clamp range is part of the PSO sweep config, not ours
 from repro.core.pso import TP_CLIP_MBPS, LookupTable, StackedLookupTable
 from repro.estimator.serve import check_quant, fwd_int8, quantize_estimator
+from repro.estimator.ssm import (SSMConfig, episode_features,
+                                 reduce_forecasts, ssm_forward_seq)
 from repro.estimator.train import fwd
 from repro.kernels.featurize import kpm_feature_windows
 from repro.sim.sched import SchedulerConfig, scheduler_init, scheduler_step
-from repro.sim.serving import ServingMesh, sharded_fleet_estimate
+from repro.sim.serving import (ServingMesh, sharded_fleet_estimate,
+                               sharded_ssm_estimate)
 
 
 @dataclasses.dataclass
@@ -247,7 +250,13 @@ def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
     are identical to the old per-period loop because the forward is
     row-wise (pinned by ``tests/test_sim_fleet.py``).
 
-    ``estimator``: an ``(EstimatorConfig, params)`` pair. ``serving``: an
+    ``estimator``: an ``(EstimatorConfig, params)`` pair, or an
+    ``(SSMConfig, params)`` pair — the recurrent estimator
+    (``repro.estimator.ssm``), which consumes the raw KPM report stream
+    (no IQ, no windows) through one chunked SSD sequence pass and emits
+    policy-reduced forecast estimates; ``fused`` is then a no-op (there
+    is no window featurize to fuse) and ``quant`` must be None (the
+    recurrent path serves fp32). ``serving``: an
     optional ``repro.sim.serving.ServingMesh``; when given, each period's
     forward runs as the mesh-sharded SPMD program — UE batch sharded over
     the mesh's data axis, weights replicated — instead of the
@@ -265,6 +274,9 @@ def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
     by ``tests/test_sim_fused.py``).
     """
     ecfg, params = estimator
+    if isinstance(ecfg, SSMConfig):
+        return _estimate_fleet_ssm(episode, ecfg, params, tp_clip,
+                                   serving=serving, quant=quant)
     check_quant(quant)
     if fused and episode.kpms is None:
         raise ValueError("fused featurize needs raw KPM reports: generate "
@@ -317,6 +329,42 @@ def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
         else:
             out = fwd(ecfg, params, kpms_rows, iq_rows, alloc_rows)
         est[:, sl] = np.asarray(out).reshape(n, b)
+    return np.clip(est, tp_clip[0], tp_clip[1])
+
+
+def _estimate_fleet_ssm(episode: EpisodeBatch, ecfg: SSMConfig, params,
+                        tp_clip, *, serving: Optional[ServingMesh] = None,
+                        quant: Optional[str] = None) -> np.ndarray:
+    """The recurrent arm of :func:`estimate_fleet`: the whole (N, T +
+    WINDOW) report stream runs through one chunked SSD sequence pass per
+    ``EST_CHUNK_ROWS`` UEs (the first WINDOW - 1 reports warm the state,
+    matching the windowed path's label alignment), and the (K+1)
+    forecasts collapse to the policy estimate. Under a ``serving`` mesh
+    the same math runs as the per-period O(1) step program, state
+    sharded over the batch axis (pinned allclose by
+    ``tests/test_estimator_ssm.py``)."""
+    if quant is not None:
+        raise ValueError("int8 serving applies to the windowed estimator; "
+                         "the recurrent estimator serves fp32 weights")
+    if episode.kpms is None:
+        raise ValueError("the recurrent estimator needs raw KPM reports: "
+                         "generate the episode with include_kpms=True")
+    if ecfg.include_iq and episode.iq is None:
+        raise ValueError("SSMConfig(include_iq=True) needs spectrogram "
+                         "snapshots: generate the episode with "
+                         "include_iq=True")
+    n, t_steps = episode.n_ues, episode.n_steps
+    feats = episode_features(episode.kpms, episode.alloc_ratio,
+                             episode.iq if ecfg.include_iq else None)
+    if serving is not None:
+        return sharded_ssm_estimate(ecfg, params, feats, serving, tp_clip,
+                                    n_periods=t_steps)
+    est = np.empty((n, t_steps))
+    for i in range(0, n, EST_CHUNK_ROWS):
+        fc, _ = ssm_forward_seq(ecfg, params,
+                                jnp.asarray(feats[i:i + EST_CHUNK_ROWS]))
+        est[i:i + EST_CHUNK_ROWS] = reduce_forecasts(
+            ecfg, np.asarray(fc[:, WINDOW - 1:WINDOW - 1 + t_steps]))
     return np.clip(est, tp_clip[0], tp_clip[1])
 
 

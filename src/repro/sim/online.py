@@ -47,11 +47,14 @@ from repro.checkpoint import CheckpointManager
 from repro.core.pso import TP_CLIP_MBPS
 from repro.dist import sharding as sh
 from repro.estimator.model import EstimatorConfig
-from repro.estimator.train import fwd, make_indexed_step
+from repro.estimator.ssm import (SSMConfig, episode_features,
+                                 reduce_forecasts, ssm_state_init, ssm_step)
+from repro.estimator.train import (fwd, make_indexed_step,
+                                   make_indexed_step_ssm)
 from repro.kernels.quant.ref import quantize_ref
 from repro.optim import AdamW
-from repro.sim.serving import (ServingMesh, replicate_params,
-                               serving_program)
+from repro.sim.serving import (STATE_AXES, ServingMesh, replicate_params,
+                               serving_program, ssm_serving_program)
 
 F32 = jnp.float32
 I32 = jnp.int32
@@ -103,6 +106,27 @@ class ReplayBufferQ(NamedTuple):
         return self.tp.shape[0]
 
 
+class ReplayBufferSSM(NamedTuple):
+    """The recurrent estimator's ring: each row is one report event —
+    the per-UE SSD state *as it was* before the report, the report's
+    features, and the measured-throughput label. Replaying a row re-runs
+    exactly one recurrence step from the stored state (truncated BPTT,
+    length 1 — ``estimator.train.ssm_step_loss``), so replay cost never
+    depends on how much history the live states have absorbed. No int8
+    variant: quantizing stored states would perturb every replayed
+    gradient (``ring_quant`` is refused for SSM configs)."""
+
+    state: jax.Array  # (C, G, nh//G, hd, N) pre-report recurrent states
+    feats: jax.Array  # (C, F) report features
+    tp: jax.Array  # (C,) measured throughput labels (Mbps)
+    head: jax.Array  # i32 scalar — next write slot
+    seen: jax.Array  # i32 scalar — total rows ever ingested
+
+    @property
+    def capacity(self) -> int:
+        return self.tp.shape[0]
+
+
 def _rowq(x):
     """Per-sample quantization of an (n, ...) batch: the ``kernels/quant``
     rowwise formula over each sample's flattened features."""
@@ -118,11 +142,22 @@ def buffer_init(capacity: int, e: EstimatorConfig,
     With ``serving`` the sample arrays are committed row-sharded over the
     mesh's data axis (``dist.sharding.put`` under the ``batch`` rule); on
     a single device / no mesh they are plain device arrays.
-    ``quant="int8"`` builds the quantized ring (:class:`ReplayBufferQ`)."""
+    ``quant="int8"`` builds the quantized ring (:class:`ReplayBufferQ`).
+    An :class:`~repro.estimator.ssm.SSMConfig` builds the recurrent ring
+    (:class:`ReplayBufferSSM`; ``quant`` must then be None)."""
     if quant not in RING_QUANT_MODES:
         raise ValueError(
             f"ring_quant must be one of {RING_QUANT_MODES}: {quant!r}")
-    if quant == "int8":
+    if isinstance(e, SSMConfig):
+        if quant is not None:
+            raise ValueError(
+                "ring_quant applies to the windowed estimator's ring; the "
+                "recurrent ring stores states exactly (fp32)")
+        z = {"state": jnp.zeros((capacity,) + e.state_shape(), F32),
+             "feats": jnp.zeros((capacity, e.n_feats), F32),
+             "tp": jnp.zeros((capacity,), F32)}
+        cls = ReplayBufferSSM
+    elif quant == "int8":
         z = {"kpms_q": jnp.zeros((capacity, e.window, e.n_kpms), jnp.int8),
              "kpms_s": jnp.ones((capacity, 1), F32),
              "iq_q": jnp.zeros((capacity, 2, e.n_sc, e.n_sym), jnp.int8),
@@ -265,6 +300,62 @@ def buffer_add_masked(buf, kpms, iq, alloc, tp, mask):
                    jnp.asarray(mask, bool))
 
 
+@functools.partial(jax.jit, donate_argnums=0)
+def _ring_scatter_ssm(buf: ReplayBufferSSM, state, feats,
+                      tp) -> ReplayBufferSSM:
+    # the recurrent ring's in-place write (see _ring_scatter)
+    cap = buf.tp.shape[0]
+    n = tp.shape[0]
+    idx = (buf.head + jnp.arange(n, dtype=I32)) % cap
+    return ReplayBufferSSM(
+        state=buf.state.at[idx].set(state),
+        feats=buf.feats.at[idx].set(feats),
+        tp=buf.tp.at[idx].set(tp),
+        head=(buf.head + n) % cap,
+        seen=buf.seen + n)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _ring_scatter_masked_ssm(buf: ReplayBufferSSM, state, feats, tp,
+                             mask) -> ReplayBufferSSM:
+    # _ring_scatter_masked for the recurrent ring (slot-pool ingest:
+    # cumsum-packed valid rows, invalid rows dropped at index ``cap``)
+    cap = buf.tp.shape[0]
+    m = mask.astype(I32)
+    k = m.sum()
+    pos = jnp.cumsum(m) - 1
+    idx = jnp.where(mask, (buf.head + pos) % cap, cap)
+    return ReplayBufferSSM(
+        state=buf.state.at[idx].set(state, mode="drop"),
+        feats=buf.feats.at[idx].set(feats, mode="drop"),
+        tp=buf.tp.at[idx].set(tp, mode="drop"),
+        head=(buf.head + k) % cap,
+        seen=buf.seen + k)
+
+
+def buffer_add_ssm(buf: ReplayBufferSSM, state, feats, tp,
+                   mask=None) -> ReplayBufferSSM:
+    """Ring-ingest N report events (pre-report state, features, label).
+
+    ``mask`` selects live rows (the slot-pool path) through the packed
+    fixed-shape scatter; without one, overflow keeps the newest
+    ``capacity`` rows exactly like :func:`buffer_add`."""
+    cap = int(buf.tp.shape[0])
+    n = int(np.shape(tp)[0])
+    if mask is not None:
+        if n > cap:
+            raise ValueError(
+                f"masked ingest of {n} slots exceeds ring capacity {cap}; "
+                "size OnlineConfig.capacity >= the slot-pool capacity")
+        return _ring_scatter_masked_ssm(
+            buf, jnp.asarray(state, F32), jnp.asarray(feats, F32),
+            jnp.asarray(tp, F32), jnp.asarray(mask, bool))
+    if n > cap:
+        state, feats, tp = (x[-cap:] for x in (state, feats, tp))
+    return _ring_scatter_ssm(buf, jnp.asarray(state, F32),
+                             jnp.asarray(feats, F32), jnp.asarray(tp, F32))
+
+
 def buffer_count(buf) -> int:
     """Valid rows in the ring (saturates at capacity)."""
     return int(min(int(buf.seen), buf.capacity))
@@ -280,6 +371,8 @@ def buffer_data(buf) -> dict:
         return {"kpms": (buf.kpms_q, buf.kpms_s),
                 "iq": (buf.iq_q, buf.iq_s), "alloc": buf.alloc,
                 "tp": buf.tp}
+    if isinstance(buf, ReplayBufferSSM):
+        return {"state": buf.state, "feats": buf.feats, "tp": buf.tp}
     return {"kpms": buf.kpms, "iq": buf.iq, "alloc": buf.alloc,
             "tp": buf.tp}
 
@@ -405,11 +498,15 @@ def online_step_program(ecfg: EstimatorConfig, opt: AdamW,
     """One compiled adaptation step per (estimator, optimizer, deployment)
     — the shared ``make_indexed_step`` factory, traced under the serving
     mesh when one is given so buffer minibatches shard over the data axis
-    and the gradient psum is in the program."""
+    and the gradient psum is in the program. An ``SSMConfig`` takes the
+    recurrent factory (``make_indexed_step_ssm``) — same calling
+    convention, stored-state replay rows."""
+    factory = (make_indexed_step_ssm if isinstance(ecfg, SSMConfig)
+               else make_indexed_step)
     if serving is None:
-        return make_indexed_step(ecfg, opt)
-    return make_indexed_step(ecfg, opt, mesh=serving.mesh,
-                             overrides=serving.rule_overrides())
+        return factory(ecfg, opt)
+    return factory(ecfg, opt, mesh=serving.mesh,
+                   overrides=serving.rule_overrides())
 
 
 def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
@@ -441,6 +538,12 @@ def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
     from repro.sim.engine import emit_period_samples
 
     ecfg, params = estimator
+    if isinstance(ecfg, SSMConfig):
+        # the recurrent loop: same drift monitor, same AdamW bursts, the
+        # ring stores (pre-report state, report, label) events instead of
+        # windows; ``fused`` is a no-op (nothing to featurize)
+        return _online_estimate_fleet_ssm(episode, ecfg, params, ocfg,
+                                          serving=serving, tp_clip=tp_clip)
     if episode.iq is None:
         raise ValueError(
             "online adaptation needs IQ spectrograms: generate the episode "
@@ -511,6 +614,115 @@ def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
                 if serving is not None:
                     # weight refresh: re-commit replicated so the next
                     # period's predict is a compiled-program cache hit
+                    params = replicate_params(serving, params)
+                total_steps += ocfg.steps
+                train_loss.append(float(np.mean(burst)))
+                adapted[t] = True
+                if mgr is not None:
+                    mgr.save(dstate.n_triggers, params)  # async
+                    ckpt_steps.append(dstate.n_triggers)
+    if mgr is not None:
+        mgr.wait()
+    stats = OnlineStats(rmse=rmse, adapted=adapted,
+                        n_adaptations=int(adapted.sum()),
+                        train_steps=total_steps, train_loss=train_loss,
+                        buffer_fill=buffer_count(buf),
+                        threshold_mbps=drift_threshold(ocfg.drift, dstate),
+                        params=params, ckpt_steps=ckpt_steps)
+    return est, stats
+
+
+def _online_estimate_fleet_ssm(episode, c: SSMConfig, params,
+                               ocfg: OnlineConfig, *,
+                               serving: Optional[ServingMesh] = None,
+                               tp_clip=TP_CLIP_MBPS
+                               ) -> tuple[np.ndarray, OnlineStats]:
+    """The recurrent arm of :func:`online_estimate_fleet`.
+
+    Structurally the same closed loop with two differences born from the
+    O(1) ingest. First, predict and observe are *one* program: the
+    per-period ``ssm_step`` both advances each UE's recurrent state and
+    emits its forecasts — there is no separate featurize stage, and each
+    period costs the same whether the fleet has 30 or 30 000 reports of
+    history (the first WINDOW - 1 trace columns run through the very same
+    step program as label-free warmup). Second, the replay ring stores
+    (pre-report state, report features, label) events; an adaptation
+    burst replays single recurrence steps from those stored states
+    (``estimator.train.ssm_step_loss``). The carried fleet states are
+    *not* recomputed after a burst — they were built by older weights,
+    and the recurrence's per-period decay forgets them at exp(dt*A);
+    re-warming 30 columns per burst would reintroduce the O(WINDOW) cost
+    this estimator exists to remove."""
+    if episode.kpms is None:
+        raise ValueError("the recurrent estimator needs raw KPM reports: "
+                         "generate the episode with include_kpms=True")
+    if c.include_iq and episode.iq is None:
+        raise ValueError("SSMConfig(include_iq=True) needs spectrogram "
+                         "snapshots: generate the episode with "
+                         "include_iq=True")
+    n, t_steps = episode.n_ues, episode.n_steps
+    feats = episode_features(episode.kpms, episode.alloc_ratio,
+                             episode.iq if c.include_iq else None)
+    off = feats.shape[1] - t_steps - 1  # = WINDOW - 1, period 0's column
+    opt = AdamW(lr=ocfg.lr, weight_decay=ocfg.weight_decay,
+                clip_norm=ocfg.clip_norm)
+    opt_state = opt.init(params)
+    step_fn = online_step_program(c, opt, serving)
+    if serving is not None:
+        predict_fn = ssm_serving_program(c, serving)
+        params = replicate_params(serving, params)
+        ctx = sh.use_rules(serving.mesh, serving.rule_overrides())
+    else:
+        predict_fn = functools.partial(ssm_step, c)
+        ctx = contextlib.nullcontext()
+    mgr = (CheckpointManager(ocfg.ckpt_dir, keep=ocfg.ckpt_keep)
+           if ocfg.ckpt_dir else None)
+    buf = buffer_init(ocfg.capacity, c, serving=serving,
+                      quant=ocfg.ring_quant)
+    dstate = drift_init()
+    rng = np.random.default_rng(ocfg.seed)
+    key = jax.random.PRNGKey(ocfg.seed)
+    est = np.empty((n, t_steps))
+    rmse = np.empty(t_steps)
+    adapted = np.zeros(t_steps, bool)
+    train_loss: list = []
+    ckpt_steps: list = []
+    total_steps = 0
+    with ctx:
+        def place(x, axes):
+            return sh.put(jnp.asarray(x, F32), axes)
+
+        state = place(ssm_state_init(c, (n,)), STATE_AXES)
+        for col in range(off):  # warmup reports precede the first label
+            state, _ = predict_fn(params, state,
+                                  place(feats[:, col], ("batch", None)))
+        for t in range(t_steps):
+            feats_t = place(feats[:, off + t], ("batch", None))
+            state_prev = state
+            state, fc = predict_fn(params, state, feats_t)
+            fc = np.asarray(fc)
+            # the monitor watches the served *current* estimate's error;
+            # the controllers consume the policy-reduced forecasts
+            cur = np.clip(fc[:, 0], tp_clip[0], tp_clip[1])
+            est[:, t] = np.clip(reduce_forecasts(c, fc),
+                                tp_clip[0], tp_clip[1])
+            tp_t = episode.tp_mbps[:, t].astype(np.float32)
+            rmse[t] = float(np.sqrt(np.mean((cur - tp_t) ** 2)))
+            buf = buffer_add_ssm(buf, state_prev, feats_t,
+                                 place(tp_t, ("batch",)))
+            fill = buffer_count(buf)
+            dstate, fired = drift_step(ocfg.drift, dstate, rmse[t],
+                                       armed=fill >= ocfg.min_fill)
+            if fired:
+                data = buffer_data(buf)
+                burst = []
+                for _ in range(ocfg.steps):
+                    idx = jnp.asarray(rng.integers(0, fill, ocfg.batch), I32)
+                    key, sub = jax.random.split(key)
+                    params, opt_state, loss = step_fn(params, opt_state,
+                                                      data, idx, sub)
+                    burst.append(float(loss))
+                if serving is not None:
                     params = replicate_params(serving, params)
                 total_steps += ocfg.steps
                 train_loss.append(float(np.mean(burst)))

@@ -426,6 +426,29 @@ def simulate_pool(sessions: EpisodeBatch, schedule: ChurnSchedule, table,
                        lifecycle=stats)
 
 
+@jax.jit
+def _ssm_slot_reset(state, warm_all, sid, fresh):
+    # scatter-free state reset: freshly admitted slots (active with age 0,
+    # i.e. admitted this period) take their session's precomputed warmed
+    # state; everyone else keeps the state they carried
+    w = warm_all[jnp.clip(sid, 0, warm_all.shape[0] - 1)]
+    return jnp.where(fresh.reshape(fresh.shape + (1,) * (w.ndim - 1)),
+                     w, state)
+
+
+@jax.jit
+def _ssm_pool_gather(active, sid, age, feats, true):
+    # each active slot's current report: session trace column
+    # WINDOW - 1 + age (the warmup prefix was consumed at admission by
+    # the precomputed warm state), plus the period's measured label
+    m, l = true.shape
+    sidc = jnp.clip(sid, 0, m - 1)
+    agec = jnp.clip(age, 0, l - 1)
+    f = feats[sidc, agec + (WINDOW - 1)]
+    tp = jnp.where(active, true[sidc, agec].astype(F32), 0.0)
+    return f, tp
+
+
 def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
                      tables_d, warm_d, true_d, cell_d, dwell_d, arrival_d,
                      *, serving=None, tp_clip=TP_CLIP_MBPS,
@@ -440,6 +463,7 @@ def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
 
     from repro.checkpoint import CheckpointManager
     from repro.dist import sharding as sh
+    from repro.estimator.ssm import SSMConfig
     from repro.estimator.train import fwd
     from repro.optim import AdamW
     from repro.sim.online import (OnlineStats, buffer_add_masked,
@@ -449,6 +473,11 @@ def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
     from repro.sim.serving import replicate_params, serving_program
 
     ecfg, params = estimator
+    if isinstance(ecfg, SSMConfig):
+        return _online_pool_run_ssm(
+            sessions, schedule, estimator, ocfg, programs, st0, tables_d,
+            warm_d, true_d, cell_d, dwell_d, arrival_d, serving=serving,
+            tp_clip=tp_clip)
     if sessions.iq is None:
         raise ValueError(
             "online adaptation needs IQ spectrograms: generate the episode "
@@ -538,6 +567,159 @@ def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
                     burst.append(float(loss))
                 if serving is not None:
                     params = replicate_params(serving, params)
+                total_steps += ocfg.steps
+                train_loss.append(float(np.mean(burst)))
+                adapted[t] = True
+                if mgr is not None:
+                    mgr.save(dstate.n_triggers, params)
+                    ckpt_steps.append(dstate.n_triggers)
+            st, ys = programs.serve_retire(
+                st, tables_d, jnp.asarray(est_col, F32), true_d, cell_d,
+                dwell_d)
+            outs.append([np.asarray(y) for y in ys])
+    if mgr is not None:
+        mgr.wait()
+    stats = OnlineStats(rmse=rmse, adapted=adapted,
+                        n_adaptations=int(adapted.sum()),
+                        train_steps=total_steps, train_loss=train_loss,
+                        buffer_fill=buffer_count(buf),
+                        threshold_mbps=drift_threshold(ocfg.drift, dstate),
+                        params=params, ckpt_steps=ckpt_steps)
+    act_ts, sid_ts, age_ts, split_ts, share_ts, dep_ts = (
+        np.stack([o[i] for o in outs]) for i in range(6))
+    lat_ts = np.stack(lat_rows)
+    return ((act_ts, sid_ts, age_ts, split_ts, share_ts, lat_ts, dep_ts),
+            est_tp, stats)
+
+
+def _online_pool_run_ssm(sessions, schedule, estimator, ocfg, programs, st0,
+                         tables_d, warm_d, true_d, cell_d, dwell_d,
+                         arrival_d, *, serving=None, tp_clip=TP_CLIP_MBPS):
+    """The recurrent closed-loop arm of ``simulate_pool``.
+
+    Slots carry per-slot SSD states alongside the controller states. On
+    admission a slot's state is reset to its session's *warmed* state —
+    ``ssm_warm_state`` over the trace's WINDOW - 1 warmup reports,
+    precomputed for every session in one sequence pass and recomputed
+    after each adaptation burst so later admits warm with the weights
+    that will serve them (bursts are rare; live slots are NOT re-warmed —
+    the recurrence forgets old-weight history at its trained decay, see
+    ``sim.online._online_estimate_fleet_ssm``). Each period is then one
+    O(1) ``ssm_step`` over the capacity axis, masked ring-ingest of
+    (pre-report state, report, label) events, and the shared drift/burst
+    machinery."""
+    import contextlib
+
+    from repro.checkpoint import CheckpointManager
+    from repro.dist import sharding as sh
+    from repro.estimator.ssm import (episode_features, reduce_forecasts,
+                                     ssm_state_init, ssm_step,
+                                     ssm_warm_state)
+    from repro.optim import AdamW
+    from repro.sim.online import (OnlineStats, buffer_add_ssm, buffer_count,
+                                  buffer_data, buffer_init, drift_init,
+                                  drift_step, drift_threshold,
+                                  online_step_program)
+    from repro.sim.serving import (STATE_AXES, replicate_params,
+                                   ssm_serving_program)
+
+    c, params = estimator
+    if sessions.kpms is None:
+        raise ValueError("the recurrent estimator needs raw KPM reports: "
+                         "generate sessions with include_kpms=True")
+    if c.include_iq and sessions.iq is None:
+        raise ValueError("SSMConfig(include_iq=True) needs spectrogram "
+                         "snapshots: generate sessions with "
+                         "include_iq=True")
+    s_slots = int(st0.active.shape[0])
+    if int(ocfg.capacity) < s_slots:
+        raise ValueError(
+            f"OnlineConfig.capacity ({ocfg.capacity}) must cover the pool "
+            f"capacity ({s_slots}) for masked ingestion")
+    t_steps = schedule.horizon
+    feats_np = episode_features(sessions.kpms, sessions.alloc_ratio,
+                                sessions.iq if c.include_iq else None)
+    feats_d = jnp.asarray(feats_np)  # (M, L + WINDOW, F)
+    warm_prefix = jnp.asarray(feats_np[:, :WINDOW - 1])
+    ready = np.asarray(schedule.ready_end, np.int64)
+    opt = AdamW(lr=ocfg.lr, weight_decay=ocfg.weight_decay,
+                clip_norm=ocfg.clip_norm)
+    opt_state = opt.init(params)
+    step_fn = online_step_program(c, opt, serving)
+    if serving is not None:
+        predict_fn = ssm_serving_program(c, serving)
+        params = replicate_params(serving, params)
+        ctx = sh.use_rules(serving.mesh, serving.rule_overrides())
+    else:
+        predict_fn = functools.partial(ssm_step, c)
+        ctx = contextlib.nullcontext()
+    mgr = (CheckpointManager(ocfg.ckpt_dir, keep=ocfg.ckpt_keep)
+           if ocfg.ckpt_dir else None)
+    buf = buffer_init(ocfg.capacity, c, serving=serving,
+                      quant=ocfg.ring_quant)
+    dstate = drift_init()
+    rng = np.random.default_rng(ocfg.seed)
+    key = jax.random.PRNGKey(ocfg.seed)
+    est_tp = np.zeros((s_slots, t_steps))
+    rmse = np.zeros(t_steps)
+    adapted = np.zeros(t_steps, bool)
+    train_loss: list = []
+    ckpt_steps: list = []
+    total_steps = 0
+    outs = []
+    lat_rows = []
+    st = st0
+    with ctx:
+        def place(x, axes):
+            return sh.put(jnp.asarray(x, F32), axes)
+
+        warm_all = ssm_warm_state(c, params, warm_prefix)  # (M, ...)
+        slot_state = place(ssm_state_init(c, (s_slots,)), STATE_AXES)
+        for t in range(t_steps):
+            st, lat = programs.admit(st, jnp.asarray(t, I32),
+                                     jnp.asarray(int(ready[t]), I32),
+                                     arrival_d, warm_d)
+            lat_rows.append(np.asarray(lat))
+            fresh = st.active & (st.age == 0)  # admitted this period
+            slot_state = _ssm_slot_reset(slot_state, warm_all, st.sid,
+                                         fresh)
+            feats_t, tp_t = _ssm_pool_gather(st.active, st.sid, st.age,
+                                             feats_d, true_d)
+            if serving is not None:
+                slot_state = sh.put(slot_state, STATE_AXES)
+                feats_t = place(feats_t, ("batch", None))
+                tp_t = place(tp_t, ("batch",))
+            state_prev = slot_state
+            slot_state, fc = predict_fn(params, slot_state, feats_t)
+            fc = np.asarray(fc)
+            act_np = np.asarray(st.active)
+            cur = np.clip(fc[:, 0], tp_clip[0], tp_clip[1])
+            est_col = np.where(
+                act_np, np.clip(reduce_forecasts(c, fc),
+                                tp_clip[0], tp_clip[1]), 0.0)
+            est_tp[:, t] = est_col
+            tp_np = np.asarray(tp_t)
+            n_act = max(int(act_np.sum()), 1)
+            rmse[t] = float(np.sqrt(
+                np.sum(act_np * (cur - tp_np) ** 2) / n_act))
+            buf = buffer_add_ssm(buf, state_prev, feats_t, tp_t,
+                                 mask=st.active)
+            fill = buffer_count(buf)
+            dstate, fired = drift_step(ocfg.drift, dstate, rmse[t],
+                                       armed=fill >= ocfg.min_fill)
+            if fired:
+                data = buffer_data(buf)
+                burst = []
+                for _ in range(ocfg.steps):
+                    idx = jnp.asarray(rng.integers(0, fill, ocfg.batch), I32)
+                    key, sub = jax.random.split(key)
+                    params, opt_state, loss = step_fn(params, opt_state,
+                                                      data, idx, sub)
+                    burst.append(float(loss))
+                if serving is not None:
+                    params = replicate_params(serving, params)
+                # future admits warm with the weights that will serve them
+                warm_all = ssm_warm_state(c, params, warm_prefix)
                 total_steps += ocfg.steps
                 train_loss.append(float(np.mean(burst)))
                 adapted[t] = True

@@ -49,6 +49,8 @@ from repro.dist import sharding as sh
 from repro.estimator.model import EstimatorConfig, estimator_forward
 from repro.estimator.serve import (check_quant, estimator_forward_int8,
                                    quantize_estimator)
+from repro.estimator.ssm import (SSMConfig, reduce_forecasts,
+                                 ssm_state_init, ssm_step)
 from repro.launch.mesh import make_host_mesh
 
 
@@ -184,4 +186,62 @@ def sharded_fleet_estimate(ecfg: EstimatorConfig, params, wins: np.ndarray,
             est[:, t] = np.clip(np.asarray(fn(params_r, kpms_t, iq_t,
                                               alloc_d)),
                                 tp_clip[0], tp_clip[1])
+    return est
+
+
+STATE_AXES = ("batch", None, None, None, None)  # per-UE recurrent state
+
+
+@functools.lru_cache(maxsize=None)
+def ssm_serving_program(c: SSMConfig, serving: ServingMesh):
+    """The recurrent per-report-period program for one deployment.
+
+    Returns ``fn(params, state, feats) -> (state, (N, K+1) forecasts)``
+    — one O(1) SSD ingest step for the whole fleet, state and report
+    batch sharded over the mesh's ``batch`` rule, weights replicated.
+    ``ssm_step`` is pure jnp (no ``pallas_call``), which is what makes
+    this program GSPMD-partitionable at all; the chunked SSD kernel only
+    serves offline sequence passes. Weight refresh after an adaptation
+    burst is the same ``replicate_params`` cache-hit path the windowed
+    program uses."""
+    mesh, overrides = serving.mesh, serving.rule_overrides()
+
+    @jax.jit
+    def fn(params, state, feats):
+        with sh.use_rules(mesh, overrides):
+            return ssm_step(c, params, state, feats)
+
+    return fn
+
+
+def sharded_ssm_estimate(c: SSMConfig, params, feats: np.ndarray,
+                         serving: ServingMesh, tp_clip, *,
+                         n_periods: int) -> np.ndarray:
+    """(N, T) Mbps: the mesh-sharded recurrent body of
+    ``engine.estimate_fleet``.
+
+    ``feats``: the (N, S, F) report-stream features
+    (``estimator.ssm.episode_features``; an EpisodeBatch trace has
+    S = n_periods + WINDOW). Every report column — warmup included —
+    runs through the *same* cached step program an AF pod would run each
+    0.1 s tick; period ``t``'s estimate is emitted at column ``off + t``
+    with ``off = S - n_periods - 1`` (= WINDOW - 1: the windowed path's
+    alignment, the final report left unconsumed just as it is there).
+    Pinned allclose to the unsharded sequence pass by
+    ``tests/test_estimator_ssm.py``."""
+    n, s = feats.shape[:2]
+    off = s - n_periods - 1  # column of period 0's report
+    fn = ssm_serving_program(c, serving)
+    params_r = replicate_params(serving, params)
+    est = np.empty((n, n_periods))
+    with sh.use_rules(serving.mesh, serving.rule_overrides()):
+        state = sh.put(ssm_state_init(c, (n,)), STATE_AXES)
+        for col in range(off + n_periods):
+            feats_t = sh.put(jnp.asarray(feats[:, col], jnp.float32),
+                             ("batch", None))
+            state, fc = fn(params_r, state, feats_t)
+            if col >= off:
+                est[:, col - off] = np.clip(
+                    reduce_forecasts(c, np.asarray(fc)),
+                    tp_clip[0], tp_clip[1])
     return est

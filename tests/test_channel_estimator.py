@@ -6,7 +6,9 @@ from repro.channel import iq as iqmod
 from repro.channel import kpm as kpmmod
 from repro.channel import scenarios as sc
 from repro.channel import throughput as tp
-from repro.estimator.baselines import ridge_fit, ridge_predict, summary_features
+from repro.estimator.baselines import (constant_floor, mlp_fit_predict,
+                                       persistence_rmse, ridge_fit,
+                                       ridge_predict, summary_features)
 from repro.estimator.model import EstimatorConfig, estimator_forward, init_estimator
 from repro.estimator.train import (BATCH_KEYS, make_train_step, r2_rmse,
                                    train_estimator)
@@ -130,6 +132,47 @@ def test_device_resident_loop_matches_explicit_batches():
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(got_params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-6, atol=1e-7)
+
+
+def test_constant_floor_is_train_mean_rmse():
+    """The floor is exactly the RMSE of predicting the train mean —
+    zero when the test set IS that constant, analytic on a known split."""
+    ytr = np.array([10.0, 20.0, 30.0])  # mean 20
+    assert constant_floor(ytr, np.full(5, 20.0)) == 0.0
+    yte = np.array([10.0, 30.0])
+    assert constant_floor(ytr, yte) == pytest.approx(10.0)
+    # scale-invariance sanity: a wider test spread raises the floor
+    assert constant_floor(ytr, np.array([0.0, 40.0])) > 10.0
+
+
+def test_persistence_rmse_analytic_and_guards():
+    """est_t = tp_{t-h}: exact on a linear ramp (|diff| == slope * h),
+    zero on a constant trace, and the horizon guard survives python -O."""
+    ramp = np.arange(10.0)[None].repeat(3, 0)  # slope 1
+    assert persistence_rmse(ramp, horizon=1) == pytest.approx(1.0)
+    assert persistence_rmse(ramp, horizon=3) == pytest.approx(3.0)
+    assert persistence_rmse(np.full((2, 6), 7.0)) == 0.0
+    for bad in (0, 10, -1):
+        with pytest.raises(ValueError, match="horizon"):
+            persistence_rmse(ramp, horizon=bad)
+
+
+def test_learned_baselines_beat_constant_floor():
+    """Table II only means something above the floor: ridge and the MLP
+    on the same summary features must both beat the train-mean constant
+    predictor on a held-out set."""
+    rng = np.random.default_rng(7)
+    tr = sc.gen_dataset(40, rng, episode_len=8, n_sc=16)
+    te = sc.gen_dataset(15, rng, episode_len=6, n_sc=16)
+    floor = constant_floor(tr["tp"], te["tp"])
+    X_tr = summary_features(tr["kpms"], "kpm15")
+    X_te = summary_features(te["kpms"], "kpm15")
+    w = ridge_fit(X_tr, tr["tp"])
+    _, rmse_ridge = r2_rmse(ridge_predict(w, X_te), te["tp"])
+    pred_mlp = mlp_fit_predict(X_tr, tr["tp"], X_te, steps=200)
+    _, rmse_mlp = r2_rmse(pred_mlp, te["tp"])
+    assert rmse_ridge < floor
+    assert rmse_mlp < floor
 
 
 def test_iq_features_beat_kpm_only_at_low_load():

@@ -58,6 +58,26 @@ def test_gen_episode_matches_batch_slices():
         np.testing.assert_array_equal(s.iq, ep.iq[0, t])
 
 
+def test_kpm_windows_gather_matches_view():
+    """``kpm_windows(method="gather")`` must be BIT-equal to the default
+    stride-trick view — normalized and raw — while actually owning its
+    memory (C-contiguous, writable), which is what callers that mutate or
+    serialize windows rely on."""
+    ep = sc.gen_episode_batch(["cci", "jamming", "none"], 7,
+                              np.random.default_rng(8), include_iq=False)
+    for normalize in (True, False):
+        view = ep.kpm_windows(normalize=normalize)
+        gathered = ep.kpm_windows(normalize=normalize, method="gather")
+        np.testing.assert_array_equal(gathered, view)
+        assert gathered.flags.c_contiguous and gathered.flags.writeable
+    try:
+        ep.kpm_windows(method="nope")
+    except ValueError as err:
+        assert "method" in str(err)
+    else:  # pragma: no cover - the guard must fire
+        raise AssertionError("bad method accepted")
+
+
 def test_gen_episode_draws_load_like_batch():
     """With ``load_ratio=None`` the shim must consume the RNG exactly like
     the batched path (same draw order), keeping mixed old/new pipelines

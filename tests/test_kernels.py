@@ -1,5 +1,15 @@
 """Per-kernel correctness: Pallas (interpret=True on CPU) vs jnp oracles,
-swept over shapes and dtypes."""
+swept over shapes and dtypes. SSD property cases (chunk invariance,
+random-shape kernel-vs-ref, exact state-carry associativity) run through
+hypothesis when available, otherwise a fixed-seed sweep of the same
+checks (the suite's standard pattern)."""
+try:
+    import hypothesis
+    import hypothesis.strategies as st_
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +18,7 @@ import pytest
 from repro.kernels.dcor import dcor_kernel, pairwise_dists, pairwise_dists_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention, mha
 from repro.kernels.quant import dequantize_rows, quantize_ref, quantize_rows
-from repro.kernels.ssd import ssd, ssd_ref
+from repro.kernels.ssd import ssd, ssd_mixer, ssd_ref, ssd_step, ssd_step_ref
 from repro.core.privacy import dcor as dcor_jnp
 
 
@@ -90,6 +100,138 @@ def test_ssd_kernel_matches_ref(dtype, S, L, nh, hd, G, N):
                                np.asarray(yr, np.float32), atol=tol, rtol=tol)
     np.testing.assert_allclose(np.asarray(st), np.asarray(str_), atol=1e-3,
                                rtol=1e-3)
+
+
+def _ssd_inputs(seed, B, S, nh, hd, G, N, dt_scale=0.5):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (B, S, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh))) * dt_scale
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    return x, dt, A, Bm, Cm
+
+
+def test_ssd_chunk_size_invariance():
+    """The chunked scan is a reassociation of one recurrence: any chunk
+    size yields the same outputs and final state to float tolerance —
+    kernel and oracle alike (the recurrent estimator leans on this when
+    it pads sequences to a chunk multiple)."""
+    x, dt, A, Bm, Cm = _ssd_inputs(11, 2, 256, 4, 16, 2, 8)
+    y0, s0 = ssd_mixer(x, dt, A, Bm, Cm, chunk=64, use_kernel=False)
+    for chunk in (128, 256):
+        y, s = ssd_mixer(x, dt, A, Bm, Cm, chunk=chunk, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                                   atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s0),
+                                   atol=2e-5, rtol=2e-5)
+    yk, sk = ssd_mixer(x, dt, A, Bm, Cm, chunk=64, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(y0),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(s0),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_step_scan_matches_mixer():
+    """Scanning the O(1) step over a sequence from a zero state
+    reproduces the chunked sequence pass — the contract that lets the
+    recurrent estimator warm state with ``ssd_mixer`` and serve with
+    ``ssd_step``."""
+    x, dt, A, Bm, Cm = _ssd_inputs(12, 2, 48, 4, 8, 2, 4)
+    y_seq, s_seq = ssd_mixer(x, dt, A, Bm, Cm, chunk=16, use_kernel=False)
+    B, S, nh, hd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    state = jnp.zeros((B, G, nh // G, hd, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        y_t, state = ssd_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t],
+                              state)
+        ys.append(np.asarray(y_t))
+    np.testing.assert_allclose(np.stack(ys, 1), np.asarray(y_seq),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_seq),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ssd_ref_gradients_finite_under_large_dt():
+    """Regression: the intra-chunk decay matrix is masked BEFORE the exp.
+    With large dt the masked upper triangle holds big positive exponents;
+    exp-then-mask keeps the forward finite but leaks inf into the
+    backward pass of the where() (inf * 0 = nan), which is exactly how
+    the recurrent estimator's offline trainer used to NaN mid-run. The
+    loss gradient w.r.t. every input must stay finite."""
+    x, dt, A, Bm, Cm = _ssd_inputs(13, 1, 64, 2, 4, 1, 4, dt_scale=40.0)
+
+    def loss(x, dt, Bm, Cm):
+        y, s = ssd_mixer(x, dt, A, Bm, Cm, chunk=32, use_kernel=False)
+        return jnp.sum(y**2) + jnp.sum(s**2)
+
+    val, grads = jax.value_and_grad(loss, argnums=(0, 1, 2, 3))(
+        x, dt, Bm, Cm)
+    assert np.isfinite(float(val))
+    for g in grads:
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+def _ssd_carry_case(seed):
+    """Exact associativity on the integer-free path: A = 0 makes every
+    decay exp(0) = 1 and small-integer inputs keep every f32 product and
+    sum exactly representable, so splitting the sequence anywhere and
+    carrying the state must be BIT-equal to the one-shot pass."""
+    rng = np.random.default_rng(seed)
+    B, S, nh, hd, G, N = 2, 32, 4, 8, 2, 4
+    x = jnp.asarray(rng.integers(-3, 4, (B, S, nh, hd)), jnp.float32)
+    dt = jnp.asarray(rng.integers(0, 3, (B, S, nh)), jnp.float32)
+    A = jnp.zeros((nh,), jnp.float32)
+    Bm = jnp.asarray(rng.integers(-2, 3, (B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.integers(-2, 3, (B, S, G, N)), jnp.float32)
+    y_full, s_full = ssd_ref(x, dt, A, Bm, Cm, 16)
+    h = S // 2
+    _, s_half = ssd_ref(x[:, :h], dt[:, :h], A, Bm[:, :h], Cm[:, :h], 16)
+    state = s_half
+    for t in range(h, S):
+        y_t, state = ssd_step_ref(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t],
+                                  state)
+        np.testing.assert_array_equal(np.asarray(y_t),
+                                      np.asarray(y_full[:, t]))
+    np.testing.assert_array_equal(np.asarray(state), np.asarray(s_full))
+
+
+def _ssd_kernel_vs_ref_case(nc, L, nh, hd, G, N, seed):
+    x, dt, A, Bm, Cm = _ssd_inputs(seed, 2, nc * L, nh, hd, G, N)
+    y, s = ssd(x, dt, A, Bm, Cm, chunk=L)
+    yr, sr = ssd_ref(x, dt, A, Bm, Cm, L)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=1e-3,
+                               rtol=1e-3)
+
+
+if HAVE_HYPOTHESIS:
+    @hypothesis.settings(max_examples=10, deadline=None)
+    @hypothesis.given(seed=st_.integers(0, 999))
+    def test_ssd_state_carry_exact_property(seed):
+        _ssd_carry_case(seed)
+
+    @hypothesis.settings(max_examples=8, deadline=None)
+    @hypothesis.given(nc=st_.integers(1, 3), L=st_.sampled_from([8, 16, 32]),
+                      hpg=st_.sampled_from([1, 2, 4]),
+                      hd=st_.sampled_from([8, 16]),
+                      G=st_.sampled_from([1, 2]),
+                      N=st_.sampled_from([4, 8]),
+                      seed=st_.integers(0, 99))
+    def test_ssd_kernel_matches_ref_property(nc, L, hpg, hd, G, N, seed):
+        _ssd_kernel_vs_ref_case(nc, L, G * hpg, hd, G, N, seed)
+else:  # pragma: no cover - depends on environment
+    @pytest.mark.parametrize("seed", [0, 7, 42])
+    def test_ssd_state_carry_exact_property(seed):
+        _ssd_carry_case(seed)
+
+    @pytest.mark.parametrize("nc,L,nh,hd,G,N,seed",
+                             [(1, 8, 2, 8, 1, 4, 0), (2, 16, 4, 16, 2, 8, 1),
+                              (3, 32, 8, 8, 2, 4, 2)])
+    def test_ssd_kernel_matches_ref_property(nc, L, nh, hd, G, N, seed):
+        _ssd_kernel_vs_ref_case(nc, L, nh, hd, G, N, seed)
 
 
 # ------------------------------------------------------------------ quant
