@@ -8,13 +8,16 @@
 #   make ssm        — SSM vs LSTM online head-to-head smoke (O(1) state)
 #   make churn      — slot-pool churn smoke (arrival/departure, no retraces)
 #   make fused      — fused-path + int8 smoke (profile breakdown, allclose)
+#   make telemetry  — telemetry smoke (1024-slot churn, <=5% overhead,
+#                     no retrace, drift event timeline -> committed record)
 #   make dryrun     — AOT dry-run cell (1 arch x 1 shape on the 256-chip mesh)
 #   make docs-check — fail on broken intra-repo links in README/docs
 #   make ci         — what .github/workflows/ci.yml runs on push
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test smoke fleet cells mesh online ssm churn fused dryrun docs-check ci
+.PHONY: test smoke fleet cells mesh online ssm churn fused telemetry \
+	dryrun docs-check ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -48,6 +51,11 @@ fused:
 	$(PY) benchmarks/fleet.py --fast --profile --sizes 256 --steps 10 \
 	  --json benchmarks/results/fused_smoke.json
 
+telemetry:
+	$(PY) benchmarks/fleet.py --fast --telemetry --sizes 1024 --steps 20 \
+	  --json benchmarks/results/telemetry_smoke.json
+	$(PY) tools/fleetmon.py benchmarks/results/telemetry_smoke.json
+
 dryrun:
 	$(PY) -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k \
 	  --no-calibrate --force
@@ -55,4 +63,5 @@ dryrun:
 docs-check:
 	$(PY) tools/docs_check.py
 
-ci: test smoke fleet cells mesh online ssm churn fused dryrun docs-check
+ci: test smoke fleet cells mesh online ssm churn fused telemetry dryrun \
+	docs-check

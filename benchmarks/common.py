@@ -2,13 +2,43 @@
 machine-config-stamped JSON output."""
 from __future__ import annotations
 
+import datetime
 import json
 import os
 import platform
+import subprocess
 import time
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
 RESULTS: list[tuple[str, float, str]] = []
+
+
+class stopwatch:
+    """``with stopwatch() as sw: body`` — ``sw.seconds`` is the wall time
+    of the body (``perf_counter``; read it after the block exits)."""
+
+    seconds = 0.0
+
+    def __enter__(self) -> "stopwatch":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.seconds = time.perf_counter() - self._t0
+        return False
+
+
+def git_sha() -> str | None:
+    """The repo HEAD a committed record was produced at (None outside a
+    checkout or without git on PATH)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
 
 
 def machine_config() -> dict:
@@ -21,7 +51,9 @@ def machine_config() -> dict:
                  "xla_flags": os.environ.get("XLA_FLAGS", "")}
     try:
         import jax
-        cfg.update(jax=jax.__version__, backend=jax.default_backend(),
+        import jaxlib
+        cfg.update(jax=jax.__version__, jaxlib=jaxlib.__version__,
+                   backend=jax.default_backend(),
                    device_count=jax.device_count(),
                    device_kind=jax.devices()[0].device_kind)
     except Exception:  # pragma: no cover - jax import is all-or-nothing
@@ -31,11 +63,18 @@ def machine_config() -> dict:
 
 def write_json(path: str, extra: dict | None = None) -> None:
     """Dump every ``record()`` row plus :func:`machine_config` (and any
-    sweep-specific ``extra``, e.g. the serving-mesh shape) to ``path``."""
+    sweep-specific ``extra``, e.g. the serving-mesh shape) to ``path``.
+    Every committed record is provenance-stamped: repo git SHA, jax +
+    jaxlib versions (in the machine config), and an ISO-8601 UTC
+    timestamp — a BENCH_* trajectory is only evidence when the reader can
+    tell which code produced which number, and when."""
     parent = os.path.dirname(path)
     if parent:
         os.makedirs(parent, exist_ok=True)
-    payload = {"config": machine_config(), **(extra or {}),
+    stamp = datetime.datetime.now(datetime.timezone.utc)
+    payload = {"config": machine_config(), "git_sha": git_sha(),
+               "timestamp": stamp.isoformat(timespec="seconds"),
+               **(extra or {}),
                "records": [{"name": n, "us_per_call": us, "derived": d}
                            for n, us, d in RESULTS]}
     with open(path, "w") as f:

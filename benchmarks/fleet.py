@@ -41,12 +41,16 @@ t=0 and never departs) bit-identical on splits to the batch engine.
 
 With ``--profile`` it profiles the per-period fleet step: a per-stage
 wall-time breakdown (featurize / estimator forward / PSO query /
-scheduler scan / load coupling), each stage unfused vs fused through the
-``repro.kernels`` Pallas paths, the end-to-end engine before/after
-fusing (with an allclose pin), the int8 estimator forward next to fp32,
-and the slot-pool path at scale against the committed
-``benchmarks/results/churn_smoke.json`` baseline. All of it lands in the
-``--json`` record, so fusion targets and speedups are evidence.
+scheduler scan / load coupling, plus the recurrent ``ssm_step`` — the
+SSM serving path has no featurize stage at all, so its evidence is the
+O(1)-in-history flatness probe rather than a fused/unfused pair), each
+windowed stage unfused vs fused through the ``repro.kernels`` Pallas
+paths, the end-to-end engine before/after fusing (with an allclose
+pin), the int8 estimator forward next to fp32, and the slot-pool path
+at scale against the committed
+``benchmarks/results/churn_smoke.json`` baseline. Every stage lands in
+the ``--json`` record as best/median/spread milliseconds, so fusion
+targets and speedups are evidence even on noisy hosts.
 
 With ``--online`` it runs the drift sweep (``repro.sim.online``): an
 estimator trained offline on a quiet scenario distribution serves a
@@ -62,12 +66,23 @@ LSTM on the SAME drift episode — pre/post-drift RMSE for both families
 SSD state vs window + IQ inputs), the K-period forecast variant sharing
 the trained weights, and the persistence floor the forecasts must beat.
 
+With ``--telemetry`` it runs the observability smoke
+(``repro.sim.telemetry``): the estimator-driven churn run with the
+in-scan metric plane on vs off — splits and estimates must stay
+bit-identical, wall-clock overhead must stay within 5%, and the compiled
+pool program must not retrace — plus a small churn + online-adaptation
+cell whose decoded event timeline (admissions with queue latency,
+departures, drift triggers, adaptation bursts) lands in the ``--json``
+record so ``tools/fleetmon.py`` can render run health from the committed
+artifact.
+
 Run:  PYTHONPATH=src python benchmarks/fleet.py [--fast] [--sizes 1 64 1024]
       PYTHONPATH=src python benchmarks/fleet.py --cells 4 --policy pf
       PYTHONPATH=src python benchmarks/fleet.py --mesh 4x2 --fast
       PYTHONPATH=src python benchmarks/fleet.py --online [--json out.json]
       PYTHONPATH=src python benchmarks/fleet.py --online --estimator ssm
       PYTHONPATH=src python benchmarks/fleet.py --churn [--sizes 1024 4096]
+      PYTHONPATH=src python benchmarks/fleet.py --telemetry --sizes 1024
       PYTHONPATH=src python benchmarks/fleet.py --profile [--json out.json]
 Also exposed as ``run(state)`` for benchmarks/run.py.
 """
@@ -95,14 +110,15 @@ if __package__ in (None, ""):  # `python benchmarks/fleet.py`
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 from benchmarks import fig6_adaptive
-from benchmarks.common import FAST, record, write_json
+from benchmarks.common import FAST, record, stopwatch, write_json
 from repro.channel.scenarios import (SCENARIOS, WINDOW, ChurnConfig,
                                      ChurnSchedule, gen_episode_batch,
                                      make_churn_schedule)
 from repro.sim import (DriftConfig, OnlineConfig, SchedulerConfig,
-                       attach_ring, build_cells_episode, estimate_fleet,
-                       handover_grid, make_serving_mesh, ring_coupling,
-                       simulate_cells, simulate_fleet, simulate_fleet_looped)
+                       TelemetryConfig, attach_ring, build_cells_episode,
+                       estimate_fleet, handover_grid, make_serving_mesh,
+                       ring_coupling, simulate_cells, simulate_fleet,
+                       simulate_fleet_looped, timed)
 from repro.sim.pool import pool_programs
 from repro.sim.sched import POLICIES
 
@@ -174,10 +190,9 @@ def fleet_cell(n: int, T: int, prof, table, cfg, fixed, rng, t0,
                speedup_at: int | None = None) -> dict:
     ep, hover = build_fleet_episode(n, T, rng)
     simulate_fleet(ep, table, prof, cfg, fixed_split=fixed)  # warm the jit
-    t1 = time.perf_counter()
-    res = simulate_fleet(ep, table, prof, cfg, fixed_split=fixed)
-    dt = time.perf_counter() - t1
-    rate = n * T / dt
+    with stopwatch() as sw:
+        res = simulate_fleet(ep, table, prof, cfg, fixed_split=fixed)
+    rate = n * T / sw.seconds
     means = res.scenario_means(ep.scenario_idx)
     hmask = np.zeros(n, bool)
     hmask[hover] = True
@@ -192,9 +207,9 @@ def fleet_cell(n: int, T: int, prof, table, cfg, fixed, rng, t0,
         m = min(n, LOOP_REF_UES)
         sub, _ = build_fleet_episode(m, T, rng)
         simulate_fleet_looped(sub, table, prof, cfg, fixed_split=fixed)
-        t2 = time.perf_counter()
-        simulate_fleet_looped(sub, table, prof, cfg, fixed_split=fixed)
-        loop_rate = m * T / (time.perf_counter() - t2)
+        with stopwatch() as sw:
+            simulate_fleet_looped(sub, table, prof, cfg, fixed_split=fixed)
+        loop_rate = m * T / sw.seconds
         out["speedup"] = rate / loop_rate
         derived += (f";looped_ue_steps_per_sec={loop_rate:.0f};"
                     f"speedup_x={rate / loop_rate:.0f};"
@@ -236,10 +251,9 @@ def cells_cell(n: int, T: int, n_cells: int, policy: str, prof, table, cfg,
     sched = SchedulerConfig(policy=policy)
     kw = dict(sched=sched, fixed_split=fixed)
     simulate_cells(ep, cgrid, table, prof, cfg, **kw)  # warm the jit
-    t1 = time.perf_counter()
-    res = simulate_cells(ep, cgrid, table, prof, cfg, **kw)
-    dt = time.perf_counter() - t1
-    rate = n * T / dt
+    with stopwatch() as sw:
+        res = simulate_cells(ep, cgrid, table, prof, cfg, **kw)
+    rate = n * T / sw.seconds
     cons_dev = float(np.abs(res.share_sums() - 1.0).max())
     jain = res.jain()
     out = {"n": n, "cells": n_cells, "policy": policy, "rate": rate,
@@ -337,21 +351,21 @@ def mesh_sweep_cell(n: int, T: int, est, serving, rng, t0) -> dict:
     grid, _ = scenario_grid(n, T, rng)
     ep = gen_episode_batch(grid, T, rng, include_iq=True, n_sc=est[0].n_sc)
     base = estimate_fleet(ep, est)  # warm the single-device jit
-    t1 = time.perf_counter()
-    base = estimate_fleet(ep, est)
-    dt_base = time.perf_counter() - t1
+    with stopwatch() as sw_base:
+        base = estimate_fleet(ep, est)
+    dt_base = sw_base.seconds
     shd = estimate_fleet(ep, est, serving=serving)  # warm the SPMD program
-    t2 = time.perf_counter()
-    shd = estimate_fleet(ep, est, serving=serving)
-    dt_shd = time.perf_counter() - t2
+    with stopwatch() as sw_shd:
+        shd = estimate_fleet(ep, est, serving=serving)
+    dt_shd = sw_shd.seconds
     close = bool(np.allclose(shd, base, rtol=1e-4, atol=1e-3))
     # the int8 serving stack (fused featurize + quantized weights): same
     # sharded per-period program, int8 LSTM/FC contractions
     kw8 = dict(serving=serving, quant="int8", fused=True)
     shd8 = estimate_fleet(ep, est, **kw8)  # warm
-    t3 = time.perf_counter()
-    shd8 = estimate_fleet(ep, est, **kw8)
-    dt_shd8 = time.perf_counter() - t3
+    with stopwatch() as sw_shd8:
+        shd8 = estimate_fleet(ep, est, **kw8)
+    dt_shd8 = sw_shd8.seconds
     # int8 weights vs fp32 weights on identical inputs: the quantization
     # error seen by the controllers, in Mbps
     int8_dev = float(np.sqrt(np.mean((np.asarray(shd8, float)
@@ -470,16 +484,16 @@ def churn_cell(n_slots: int, frac: float, T: int, prof, table, cfg, fixed,
     schedule = make_churn_schedule(ccfg, T, rng)
     sessions = churn_sessions(schedule, rng)
     kw = dict(churn=schedule, capacity=n_slots, fixed_split=fixed)
-    t_w = time.perf_counter()
-    simulate_fleet(sessions, table, prof, cfg, **kw)  # warm the pool jit
-    dt_warm = time.perf_counter() - t_w
+    with stopwatch() as sw_warm:
+        simulate_fleet(sessions, table, prof, cfg, **kw)  # warm the pool
+    dt_warm = sw_warm.seconds
     sweep = pool_programs(cfg.ewma_alpha, cfg.hysteresis_steps,
                           cfg.fallback_split, None, 1,
                           int(schedule.max_admits)).sweep
     n_traces = getattr(sweep, "_cache_size", lambda: None)()
-    t1 = time.perf_counter()
-    res = simulate_fleet(sessions, table, prof, cfg, **kw)
-    dt = time.perf_counter() - t1
+    with stopwatch() as sw:
+        res = simulate_fleet(sessions, table, prof, cfg, **kw)
+    dt = sw.seconds
     if n_traces is not None:  # compile-count assertion: churn, no retrace
         no_retrace = sweep._cache_size() == n_traces
     else:  # jax without _cache_size: a retrace would re-pay compilation
@@ -523,16 +537,136 @@ def run_churn(state: dict, sizes=None, fracs=None,
     return ok_eq and ok_retrace and ok_occupied
 
 
+# ------------------------------------------------------------- telemetry
+def _tiny_estimator():
+    """Minimal estimator for the telemetry smoke (random weights: the
+    smoke measures observability overhead and event plumbing, not
+    accuracy — and an untrained estimator's RMSE reliably trips the
+    drift monitor, which is exactly what the event-timeline cell
+    wants)."""
+    import jax
+
+    from repro.estimator.model import EstimatorConfig, init_estimator
+    e = EstimatorConfig(n_sc=16, lstm_hidden=8, hidden=8)
+    return e, init_estimator(e, jax.random.PRNGKey(0))
+
+
+def telemetry_cell(n_slots: int, T: int, est, prof, table, cfg, fixed, rng,
+                   t0) -> dict:
+    """One capacity point: the estimator-driven churn run with the metric
+    plane on vs off — splits/estimates bit-identical, wall-clock overhead
+    bounded, and zero additional retraces (the telemetry sweep is its own
+    compiled program; churning the population must never recompile it)."""
+    frac = 0.25
+    ccfg = ChurnConfig(arrival_rate=frac * n_slots,
+                       mean_dwell=max(1.0, CHURN_OCCUPANCY / frac),
+                       diurnal_amplitude=0.25, diurnal_period=T)
+    schedule = make_churn_schedule(ccfg, T, rng)
+    m = schedule.n_sessions
+    scen = np.asarray(SCENARIOS, object)[np.arange(m) % len(SCENARIOS)]
+    sessions = gen_episode_batch(scen, schedule.max_dwell, rng,
+                                 n_sc=est[0].n_sc)
+    tcfg = TelemetryConfig(events_capacity=8192)
+    kw = dict(churn=schedule, capacity=n_slots, estimator=est,
+              fixed_split=fixed)
+    base = simulate_fleet(sessions, table, prof, cfg, **kw)  # warm off
+    tele = simulate_fleet(sessions, table, prof, cfg, telemetry=tcfg, **kw)
+    identical = (np.array_equal(base.splits, tele.splits)
+                 and np.array_equal(base.est_tp, tele.est_tp))
+    sweep = pool_programs(cfg.ewma_alpha, cfg.hysteresis_steps,
+                          cfg.fallback_split, None, 1,
+                          int(schedule.max_admits), telem=tcfg).sweep
+    n_traces = getattr(sweep, "_cache_size", lambda: None)()
+    reps = 2 if FAST else 3
+    off = _best_of(lambda: simulate_fleet(sessions, table, prof, cfg, **kw),
+                   reps=reps)
+    on = _best_of(lambda: simulate_fleet(sessions, table, prof, cfg,
+                                         telemetry=tcfg, **kw), reps=reps)
+    no_retrace = (sweep._cache_size() == n_traces if n_traces is not None
+                  else True)
+    rec = tele.telemetry
+    overhead = on.best / off.best
+    out = {"n_slots": n_slots, "overhead_x": overhead,
+           "run_s_off": off.best, "run_s_on": on.best,
+           "run_s_on_median": on.median, "identical": bool(identical),
+           "no_retrace": bool(no_retrace),
+           "active_steps": rec.active_steps, "admitted": rec.admitted,
+           "events": len(rec.events), "dropped_events": rec.dropped_events}
+    record(f"telemetry/s{n_slots}", t0,
+           f"overhead_x={overhead:.3f};run_s_off={off.best:.2f};"
+           f"run_s_on={on.best:.2f};identical={bool(identical)};"
+           f"no_retrace={bool(no_retrace)};active_steps={rec.active_steps};"
+           f"admitted={rec.admitted};events={len(rec.events)};"
+           f"dropped_events={rec.dropped_events}")
+    return out
+
+
+def telemetry_drift_cell(est, prof, table, cfg, fixed, t0):
+    """A small churn + online-adaptation cell whose decoded event
+    timeline is the committed smoke record: admissions with queue
+    latency, departures, drift triggers and adaptation bursts — the run
+    health ``tools/fleetmon.py`` renders."""
+    rng = np.random.default_rng(3)
+    schedule = make_churn_schedule(
+        ChurnConfig(arrival_rate=3.0, mean_dwell=6.0), 14, rng)
+    m = schedule.n_sessions
+    scen = np.asarray(SCENARIOS, object)[np.arange(m) % len(SCENARIOS)]
+    sessions = gen_episode_batch(scen, schedule.max_dwell, rng,
+                                 n_sc=est[0].n_sc)
+    ocfg = OnlineConfig(capacity=256, batch=16, steps=2, min_fill=8,
+                        drift=DriftConfig(threshold_mbps=0.1,
+                                          calibrate_periods=2, patience=1,
+                                          cooldown=2))
+    res = simulate_fleet(sessions, table, prof, cfg, churn=schedule,
+                         capacity=12, estimator=est, online=ocfg,
+                         telemetry=TelemetryConfig())
+    rec = res.telemetry
+    kinds = {ev.kind for ev in rec.events}
+    ok = {"admit", "depart", "drift_trigger", "burst_end"} <= kinds
+    out = {"event_kinds": sorted(kinds), "n_events": len(rec.events),
+           "dropped_events": rec.dropped_events, "ok_timeline": ok}
+    record("telemetry/drift_timeline", t0,
+           f"events={len(rec.events)};"
+           f"kinds={'/'.join(sorted(kinds))};"
+           f"dropped_events={rec.dropped_events};ok={ok}")
+    return out, rec
+
+
+def run_telemetry(state: dict, sizes=None, T: int | None = None) -> bool:
+    """The telemetry smoke: overhead/bit-identity/no-retrace gates on the
+    estimator-driven churn run, plus the churn+online drift cell whose
+    decoded record lands in the JSON for ``tools/fleetmon.py``."""
+    t0 = time.time()
+    prof = _vgg_profile(state)
+    table, cfg, fixed = fig6_adaptive.fig6_table(prof)
+    est = _tiny_estimator()
+    sizes = sizes or ([256] if FAST else [1024])
+    T = T or 20
+    rng = np.random.default_rng(17)
+    cells = [telemetry_cell(s, T, est, prof, table, cfg, fixed, rng, t0)
+             for s in sizes]
+    drift, rec = telemetry_drift_cell(est, prof, table, cfg, fixed, t0)
+    state["telemetry"] = {"cells": cells, "drift": drift,
+                          "record": rec.to_dict()}
+    ok_id = all(c["identical"] for c in cells)
+    ok_overhead = all(c["overhead_x"] <= 1.05 for c in cells)
+    ok_retrace = all(c["no_retrace"] for c in cells)
+    ok_events = drift["ok_timeline"]
+    record("telemetry/claims", t0,
+           f"identical={ok_id};overhead<=1.05x={ok_overhead};"
+           f"no_retrace={ok_retrace};drift_timeline={ok_events};"
+           f"max_slots={max(sizes)}")
+    return ok_id and ok_overhead and ok_retrace and ok_events
+
+
 # --------------------------------------------------------------- profile
-def _best_of(fn, reps: int = 2) -> float:
-    """Best-of-``reps`` wall time of ``fn()``. Call once beforehand to warm
-    jit caches; best-of filters scheduler noise on small CI hosts."""
-    best = float("inf")
-    for _ in range(reps):
-        t = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t)
-    return best
+def _best_of(fn, reps: int = 2):
+    """Best/median/spread wall time of ``fn()`` as a
+    ``repro.sim.telemetry.StageStat``. Call once beforehand to warm jit
+    caches; best filters scheduler noise on small CI hosts, and the
+    median + spread land in the ``--profile`` record so a noisy host is
+    visible in the evidence rather than silently flattering it."""
+    return timed(fn, reps=reps)
 
 
 def profile_cell(n: int, T: int, est, prof, table, cfg, fixed, rng,
@@ -640,19 +774,24 @@ def profile_cell(n: int, T: int, est, prof, table, cfg, fixed, rng,
     kw = dict(estimator=est, fixed_split=fixed)
     simulate_fleet(ep, table, prof, cfg, **kw)  # warm
     simulate_fleet(ep, table, prof, cfg, fused=True, **kw)
-    t1 = time.perf_counter()
-    res_u = simulate_fleet(ep, table, prof, cfg, **kw)
-    dt_u = time.perf_counter() - t1
-    t2 = time.perf_counter()
-    res_f = simulate_fleet(ep, table, prof, cfg, fused=True, **kw)
-    dt_f = time.perf_counter() - t2
+    with stopwatch() as sw_u:
+        res_u = simulate_fleet(ep, table, prof, cfg, **kw)
+    dt_u = sw_u.seconds
+    with stopwatch() as sw_f:
+        res_f = simulate_fleet(ep, table, prof, cfg, fused=True, **kw)
+    dt_f = sw_f.seconds
     close = bool(np.allclose(res_f.est_tp, res_u.est_tp, rtol=1e-4,
                              atol=1e-3))
-    out = {"n": n, "stages_ms": {k: v * 1e3 for k, v in stages.items()},
+    out = {"n": n,
+           "stages_ms": {k: s.best * 1e3 for k, s in stages.items()},
+           "stages_ms_median": {k: s.median * 1e3
+                                for k, s in stages.items()},
+           "stages_ms_spread": {k: s.spread * 1e3
+                                for k, s in stages.items()},
            "rate_unfused": n * T / dt_u, "rate_fused": n * T / dt_f,
            "speedup_fused": dt_u / dt_f, "allclose": close}
     record(f"profile/n{n}", t0,
-           ";".join(f"{k}_ms={v * 1e3:.1f}" for k, v in stages.items())
+           ";".join(f"{k}_ms={s.best * 1e3:.1f}" for k, s in stages.items())
            + f";unfused_ue_steps_per_sec={n * T / dt_u:.0f}"
            f";fused_ue_steps_per_sec={n * T / dt_f:.0f}"
            f";fused_speedup_x={dt_u / dt_f:.2f};allclose={close}")
@@ -685,7 +824,7 @@ def profile_ssm_step(n: int, t0) -> dict:
             jax.block_until_ready(ssm_step(c, params, state, feats)[0])
 
         step()  # warm (same program for every history length)
-        return _best_of(step, reps=3)
+        return _best_of(step, reps=3).best
 
     dt_short = one_report_after(WINDOW)
     dt_long = one_report_after(4 * WINDOW)
@@ -807,9 +946,9 @@ def online_cell(n: int, T: int, est, prof, table, cfg, fixed, t0) -> dict:
                            n_sc=est[0].n_sc)
     kw = dict(estimator=est, fixed_split=fixed)
     simulate_fleet(ep, table, prof, cfg, **kw)  # warm the jits
-    t1 = time.perf_counter()
-    frozen = simulate_fleet(ep, table, prof, cfg, **kw)
-    dt_frz = time.perf_counter() - t1
+    with stopwatch() as sw_frz:
+        frozen = simulate_fleet(ep, table, prof, cfg, **kw)
+    dt_frz = sw_frz.seconds
     # bit-identity: online=None must BE the PR 4 program
     noop = simulate_fleet(ep, table, prof, cfg, online=None, **kw)
     ok_noop = (np.array_equal(noop.splits, frozen.splits)
@@ -822,9 +961,9 @@ def online_cell(n: int, T: int, est, prof, table, cfg, fixed, t0) -> dict:
     simulate_fleet(ep, table, prof, cfg, online=ocfg, **kw)  # warm the
     # online programs too (ring scatter + burst step), so overhead_x
     # compares steady-state serving, not compiler speed
-    t2 = time.perf_counter()
-    onl = simulate_fleet(ep, table, prof, cfg, online=ocfg, **kw)
-    dt_onl = time.perf_counter() - t2
+    with stopwatch() as sw_onl:
+        onl = simulate_fleet(ep, table, prof, cfg, online=ocfg, **kw)
+    dt_onl = sw_onl.seconds
     pre, post = slice(0, T // 2), slice(T // 2, None)
     out = {"n": n, "rate": n * T / dt_onl, "rate_frozen": n * T / dt_frz,
            "overhead_x": dt_onl / dt_frz, "ok_noop": ok_noop,
@@ -909,13 +1048,13 @@ def _family_cell(name: str, est, ep, ocfg, prof, table, cfg, fixed,
     n, T = ep.n_ues, ep.n_steps
     kw = dict(estimator=est, fixed_split=fixed)
     simulate_fleet(ep, table, prof, cfg, **kw)  # warm
-    t1 = time.perf_counter()
-    frozen = simulate_fleet(ep, table, prof, cfg, **kw)
-    dt_frz = time.perf_counter() - t1
+    with stopwatch() as sw_frz:
+        frozen = simulate_fleet(ep, table, prof, cfg, **kw)
+    dt_frz = sw_frz.seconds
     simulate_fleet(ep, table, prof, cfg, online=ocfg, **kw)  # warm
-    t2 = time.perf_counter()
-    onl = simulate_fleet(ep, table, prof, cfg, online=ocfg, **kw)
-    dt_onl = time.perf_counter() - t2
+    with stopwatch() as sw_onl:
+        onl = simulate_fleet(ep, table, prof, cfg, online=ocfg, **kw)
+    dt_onl = sw_onl.seconds
     return {"rate": n * T / dt_onl, "rate_frozen": n * T / dt_frz,
             "rmse_pre_frozen": _rmse(frozen, pre),
             "rmse_post_frozen": _rmse(frozen, post),
@@ -1070,8 +1209,16 @@ def main() -> int:
     ap.add_argument("--profile", action="store_true",
                     help="profile the per-period fleet step: per-stage "
                     "wall-time breakdown (featurize/estimator/PSO query/"
-                    "scheduler/coupling) plus fused-vs-unfused and "
-                    "int8-vs-fp32 before/after records")
+                    "scheduler/coupling/ssm_step) plus fused-vs-unfused "
+                    "and int8-vs-fp32 before/after records; each stage "
+                    "reports best/median/spread over reps")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="run the telemetry smoke: estimator-driven churn "
+                    "with the repro.sim.telemetry metric plane on vs off "
+                    "(bit-identity, <=5%% overhead, no-retrace gates) "
+                    "plus a churn+online drift cell whose decoded event "
+                    "timeline lands in the --json record for "
+                    "tools/fleetmon.py")
     ap.add_argument("--churn", action="store_true",
                     help="run the slot-pool churn sweep: continuous UE "
                     "arrival/departure through a fixed-capacity slot pool "
@@ -1106,6 +1253,10 @@ def main() -> int:
         else:
             ok = run_online(state, sizes=args.sizes, T=T)
             label = "online sweep"
+    elif args.telemetry:
+        T = args.steps or 20
+        ok = run_telemetry(state, sizes=args.sizes, T=T)
+        label = "telemetry smoke"
     elif args.churn:
         T = args.steps or (20 if (FAST or args.fast) else 40)
         ok = run_churn(state, sizes=args.sizes, fracs=args.churn_fracs, T=T)
@@ -1126,7 +1277,9 @@ def main() -> int:
                                "online": state.get("online"),
                                "ssm": state.get("ssm"),
                                "churn": state.get("churn"),
-                               "profile": state.get("profile"), "ok": ok})
+                               "profile": state.get("profile"),
+                               "telemetry": state.get("telemetry"),
+                               "ok": ok})
     print(f"# {label} {'OK' if ok else 'FAILED'}", flush=True)
     return 0 if ok else 1
 

@@ -21,12 +21,22 @@ from repro.sim.serving import (ServingMesh, make_serving_mesh,
                                replicate_params, serving_program,
                                sharded_fleet_estimate,
                                sharded_ssm_estimate, ssm_serving_program)
+from repro.sim.telemetry import (EVENT_NAMES, HostTelemetry, StageStat,
+                                 TelemetryConfig, TelemetryEvent,
+                                 TelemetryRecord, TelemetryState,
+                                 telemetry_decode, telemetry_init,
+                                 telemetry_step, timed, timed_stages,
+                                 to_jsonl, to_prometheus, trace_capture)
+from repro.sim.telemetry import stage as telemetry_stage
 
-__all__ = ["CellsResult", "DriftConfig", "DriftState", "FleetResult",
+__all__ = ["CellsResult", "DriftConfig", "DriftState", "EVENT_NAMES",
+           "FleetResult", "HostTelemetry",
            "LifecycleStats", "OnlineConfig", "OnlineStats", "POLICIES",
            "PoolPrograms", "PoolState", "ReplayBuffer", "ReplayBufferSSM",
            "SchedulerConfig",
-           "SchedulerState", "ServingMesh", "TP_CLIP_MBPS", "attach_ring",
+           "SchedulerState", "ServingMesh", "StageStat",
+           "TP_CLIP_MBPS", "TelemetryConfig", "TelemetryEvent",
+           "TelemetryRecord", "TelemetryState", "attach_ring",
            "buffer_add", "buffer_add_masked", "buffer_add_ssm",
            "buffer_count", "buffer_data",
            "buffer_init", "build_cells_episode", "cell_load", "cell_shares",
@@ -39,4 +49,6 @@ __all__ = ["CellsResult", "DriftConfig", "DriftState", "FleetResult",
            "scheduler_step", "serving_program", "sharded_fleet_estimate",
            "sharded_ssm_estimate", "ssm_serving_program",
            "simulate_cells", "simulate_fleet", "simulate_fleet_looped",
-           "simulate_pool", "split_metrics"]
+           "simulate_pool", "split_metrics", "telemetry_decode",
+           "telemetry_init", "telemetry_stage", "telemetry_step", "timed",
+           "timed_stages", "to_jsonl", "to_prometheus", "trace_capture"]

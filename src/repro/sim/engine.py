@@ -43,9 +43,11 @@ from repro.estimator.ssm import (SSMConfig, episode_features,
                                  reduce_forecasts, ssm_forward_seq)
 from repro.estimator.train import fwd
 from repro.kernels.featurize import kpm_feature_windows
+from repro.sim import telemetry as telmod
 from repro.sim.sched import SchedulerConfig, scheduler_init, scheduler_step
 from repro.sim.serving import (ServingMesh, sharded_fleet_estimate,
                                sharded_ssm_estimate)
+from repro.sim.telemetry import TelemetryConfig
 
 
 @dataclasses.dataclass
@@ -68,6 +70,9 @@ class FleetResult:
     # the batch-synchronous path, where every (u, t) cell is live
     lifecycle: Optional[object] = None  # sim.pool.LifecycleStats when the
     # run churned (admissions, departures, admission latency); else None
+    telemetry: Optional[object] = None  # sim.telemetry.TelemetryRecord when
+    # the run was passed ``telemetry=TelemetryConfig(...)``; None (and the
+    # traced programs untouched) on the default path
 
     @property
     def n_ues(self) -> int:
@@ -116,7 +121,8 @@ def split_metrics(profile: SplitProfile, splits: np.ndarray,
 
 @functools.lru_cache(maxsize=None)
 def _sweep_fn(ewma_alpha: float, hysteresis_steps: int, fallback_split: int,
-              sched: Optional[SchedulerConfig] = None, n_cells: int = 1):
+              sched: Optional[SchedulerConfig] = None, n_cells: int = 1,
+              telem: Optional[TelemetryConfig] = None):
     """Compiled fleet sweep, cached per controller (+ scheduler) config
     (jit's own cache then handles distinct fleet shapes).
 
@@ -125,39 +131,108 @@ def _sweep_fn(ewma_alpha: float, hysteresis_steps: int, fallback_split: int,
     the scan so allocation, estimation and splitting co-evolve: each
     period the scheduler divides every cell's PRB budget over its attached
     UEs (PF state carried across periods), and each controller sees its
-    estimate scaled by the share it was actually granted."""
+    estimate scaled by the share it was actually granted.
+
+    ``telem`` (default None) selects the telemetry variant: the same scan
+    additionally carries a ``TelemetryState``, folding each period's
+    splits / error / delay / shares into it via ``telemetry_step`` and
+    (on the scheduled arm) logging cell-index changes as handover events.
+    ``telem=None`` returns the exact prior programs — the telemetry
+    variants are *separate* cache entries, never a branch inside the
+    default trace."""
     cfg = ControllerConfig(ewma_alpha, hysteresis_steps, fallback_split)
     step = functools.partial(controller_step, cfg=cfg)
 
     if sched is None:
+        if telem is None:
+            @jax.jit
+            def sweep(tab, warm, est):
+                init = controller_init(warm, batch_shape=tab.shape[:1])
+
+                def body(state, tp_t):
+                    return jax.vmap(step)(tab, state, tp_t)
+
+                _, splits = lax.scan(body, init, est.T)
+                return splits.T
+
+            return sweep
+
         @jax.jit
-        def sweep(tab, warm, est):
-            init = controller_init(warm, batch_shape=tab.shape[:1])
+        def sweep_telem(tab, warm, est, true, dconst, dbytes, ts0):
+            init = (controller_init(warm, batch_shape=tab.shape[:1]), ts0)
+            ones = jnp.ones(tab.shape[:1], jnp.float32)
+            live = jnp.ones(tab.shape[:1], bool)
 
-            def body(state, tp_t):
-                return jax.vmap(step)(tab, state, tp_t)
+            def body(carry, xs):
+                ctl, ts = carry
+                est_t, true_t, t = xs
+                with jax.named_scope("controller_step"):
+                    ctl, split = jax.vmap(step)(tab, ctl, est_t)
+                with jax.named_scope("telemetry_step"):
+                    ts, row = telmod.telemetry_step(
+                        telem, ts, period=t, split=split, est_tp=est_t,
+                        true_tp=true_t, share=ones, active=live,
+                        dconst=dconst, dbytes=dbytes)
+                return (ctl, ts), (split, row)
 
-            _, splits = lax.scan(body, init, est.T)
-            return splits.T
+            (_, ts), (splits, rows) = lax.scan(
+                body, init,
+                (est.T, true.T, jnp.arange(est.shape[1], dtype=jnp.int32)))
+            return splits.T, ts, rows
 
-        return sweep
+        return sweep_telem
+
+    if telem is None:
+        @jax.jit
+        def sweep_scheduled(tab, warm, est, rate, cells):
+            init = (controller_init(warm, batch_shape=tab.shape[:1]),
+                    scheduler_init(tab.shape[0]))
+
+            def body(carry, xs):
+                ctl, ss = carry
+                est_t, rate_t, cell_t = xs
+                ss, share = scheduler_step(sched, n_cells, ss, cell_t, rate_t)
+                ctl, split = jax.vmap(step)(tab, ctl, est_t * share)
+                return (ctl, ss), (split, share)
+
+            _, (splits, shares) = lax.scan(body, init,
+                                           (est.T, rate.T, cells.T))
+            return splits.T, shares.T
+
+        return sweep_scheduled
 
     @jax.jit
-    def sweep_scheduled(tab, warm, est, rate, cells):
+    def sweep_scheduled_telem(tab, warm, est, rate, cells, dconst, dbytes,
+                              ts0):
         init = (controller_init(warm, batch_shape=tab.shape[:1]),
-                scheduler_init(tab.shape[0]))
+                scheduler_init(tab.shape[0]), ts0, cells[:, 0])
 
         def body(carry, xs):
-            ctl, ss = carry
-            est_t, rate_t, cell_t = xs
-            ss, share = scheduler_step(sched, n_cells, ss, cell_t, rate_t)
-            ctl, split = jax.vmap(step)(tab, ctl, est_t * share)
-            return (ctl, ss), (split, share)
+            ctl, ss, ts, prev_cell = carry
+            est_t, rate_t, cell_t, t = xs
+            with jax.named_scope("scheduler_step"):
+                ss, share = scheduler_step(sched, n_cells, ss, cell_t, rate_t)
+            with jax.named_scope("controller_step"):
+                ctl, split = jax.vmap(step)(tab, ctl, est_t * share)
+            with jax.named_scope("telemetry_step"):
+                # what split_metrics sees: PRB-scaled, floored throughput
+                eff = jnp.maximum(rate_t * jnp.clip(share, 0.0, 1.0),
+                                  tpmod.PRB_FLOOR_MBPS)
+                hand = (cell_t != prev_cell).sum(dtype=jnp.int32)
+                ts, row = telmod.telemetry_step(
+                    telem, ts, period=t, split=split, est_tp=est_t,
+                    true_tp=rate_t, eff_tp=eff, share=share,
+                    active=jnp.ones(tab.shape[:1], bool), dconst=dconst,
+                    dbytes=dbytes, n_handover=hand)
+            return (ctl, ss, ts, cell_t), (split, share, row)
 
-        _, (splits, shares) = lax.scan(body, init, (est.T, rate.T, cells.T))
-        return splits.T, shares.T
+        (_, _, ts, _), (splits, shares, rows) = lax.scan(
+            body, init,
+            (est.T, rate.T, cells.T,
+             jnp.arange(est.shape[1], dtype=jnp.int32)))
+        return splits.T, shares.T, ts, rows
 
-    return sweep_scheduled
+    return sweep_scheduled_telem
 
 
 def run_controllers(tables: np.ndarray, est_tp: np.ndarray,
@@ -196,6 +271,37 @@ def run_scheduled(tables: np.ndarray, est_tp: np.ndarray,
         jnp.asarray(est_tp, jnp.float32), jnp.asarray(rate_mbps, jnp.float32),
         jnp.asarray(cell_idx, jnp.int32))
     return np.asarray(splits), np.asarray(shares)
+
+
+def _run_controllers_telem(tables, est_tp, true_tp, cfg: ControllerConfig,
+                           warm_split, tcfg: TelemetryConfig, dconst, dbytes,
+                           ts0):
+    """``run_controllers`` with the metric plane carried through the scan:
+    also returns the final ``TelemetryState`` and the stacked per-period
+    rows. The public entry point stays untouched — the telemetry variant
+    is a distinct compiled program."""
+    sweep = _sweep_fn(cfg.ewma_alpha, cfg.hysteresis_steps,
+                      cfg.fallback_split, telem=tcfg)
+    splits, ts, rows = sweep(
+        jnp.asarray(tables, jnp.int32), jnp.asarray(warm_split, jnp.int32),
+        jnp.asarray(est_tp, jnp.float32), jnp.asarray(true_tp, jnp.float32),
+        dconst, dbytes, ts0)
+    return np.asarray(splits), ts, rows
+
+
+def _run_scheduled_telem(tables, est_tp, cfg: ControllerConfig, warm_split,
+                         sched: SchedulerConfig, n_cells: int, cell_idx,
+                         rate_mbps, tcfg: TelemetryConfig, dconst, dbytes,
+                         ts0):
+    """``run_scheduled`` with the metric plane (handover events included)
+    carried through the scan."""
+    sweep = _sweep_fn(cfg.ewma_alpha, cfg.hysteresis_steps,
+                      cfg.fallback_split, sched, int(n_cells), telem=tcfg)
+    splits, shares, ts, rows = sweep(
+        jnp.asarray(tables, jnp.int32), jnp.asarray(warm_split, jnp.int32),
+        jnp.asarray(est_tp, jnp.float32), jnp.asarray(rate_mbps, jnp.float32),
+        jnp.asarray(cell_idx, jnp.int32), dconst, dbytes, ts0)
+    return np.asarray(splits), np.asarray(shares), ts, rows
 
 
 def emit_period_samples(episode: EpisodeBatch, t: int,
@@ -304,7 +410,8 @@ def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
         center = jnp.asarray(kpmmod.KPM_CENTER)
         scale = jnp.asarray(kpmmod.KPM_SCALE)
     else:
-        wins = episode.kpm_windows(normalize=True).astype(np.float32)
+        with telmod.stage("featurize"):
+            wins = episode.kpm_windows(normalize=True).astype(np.float32)
     est = np.empty((n, t_steps))
     periods = max(1, min(t_steps, EST_CHUNK_ROWS // max(n, 1)))
     for t0 in range(0, t_steps, periods):
@@ -313,10 +420,12 @@ def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
         rows = n * b
         # (N, b, ...) -> (N*b, ...): row (u * b + j) is UE u at period t0+j
         if fused:
-            # window j of the chunk covers trace steps [t0+j, t0+j+WINDOW)
-            kw = kpm_feature_windows(kpms_d[:, t0:t0 + b + WINDOW - 1],
-                                     center, scale, WINDOW)
-            kpms_rows = kw.reshape(rows, WINDOW, kw.shape[-1])
+            with telmod.stage("featurize"):
+                # window j of the chunk covers trace steps
+                # [t0+j, t0+j+WINDOW)
+                kw = kpm_feature_windows(kpms_d[:, t0:t0 + b + WINDOW - 1],
+                                         center, scale, WINDOW)
+                kpms_rows = kw.reshape(rows, WINDOW, kw.shape[-1])
         else:
             kpms_rows = jnp.asarray(np.ascontiguousarray(wins[:, sl]).reshape(
                 rows, *wins.shape[2:]))
@@ -324,10 +433,11 @@ def estimate_fleet(episode: EpisodeBatch, estimator, tp_clip=TP_CLIP_MBPS,
                                          np.float32).reshape(
             rows, *episode.iq.shape[2:]))
         alloc_rows = jnp.asarray(np.repeat(alloc, b))
-        if quant == "int8":
-            out = fwd_int8(ecfg, qparams, kpms_rows, iq_rows, alloc_rows)
-        else:
-            out = fwd(ecfg, params, kpms_rows, iq_rows, alloc_rows)
+        with telmod.stage("estimator_fwd"):
+            if quant == "int8":
+                out = fwd_int8(ecfg, qparams, kpms_rows, iq_rows, alloc_rows)
+            else:
+                out = fwd(ecfg, params, kpms_rows, iq_rows, alloc_rows)
         est[:, sl] = np.asarray(out).reshape(n, b)
     return np.clip(est, tp_clip[0], tp_clip[1])
 
@@ -361,8 +471,9 @@ def _estimate_fleet_ssm(episode: EpisodeBatch, ecfg: SSMConfig, params,
                                     n_periods=t_steps)
     est = np.empty((n, t_steps))
     for i in range(0, n, EST_CHUNK_ROWS):
-        fc, _ = ssm_forward_seq(ecfg, params,
-                                jnp.asarray(feats[i:i + EST_CHUNK_ROWS]))
+        with telmod.stage("estimator_fwd"):
+            fc, _ = ssm_forward_seq(ecfg, params,
+                                    jnp.asarray(feats[i:i + EST_CHUNK_ROWS]))
         est[i:i + EST_CHUNK_ROWS] = reduce_forecasts(
             ecfg, np.asarray(fc[:, WINDOW - 1:WINDOW - 1 + t_steps]))
     return np.clip(est, tp_clip[0], tp_clip[1])
@@ -380,7 +491,9 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
                    n_cells: int = 1,
                    churn=None, capacity: Optional[int] = None,
                    quant: Optional[str] = None,
-                   fused: bool = False) -> FleetResult:
+                   fused: bool = False,
+                   telemetry: Optional[TelemetryConfig] = None
+                   ) -> FleetResult:
     """Vectorized fleet simulation (the production path).
 
     Consumes an ``EpisodeBatch`` of N UEs over T report periods (0.1 s
@@ -444,6 +557,17 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
     bit-identical to the PR 6 engine (pinned by
     ``tests/test_sim_fused.py``). ``quant`` requires a frozen estimator
     (the online trainer adapts fp32 weights).
+
+    ``telemetry`` (default None): a ``repro.sim.telemetry.TelemetryConfig``
+    turns on the in-scan metric plane — counters, running stats,
+    fixed-bucket histograms and the typed event ring accumulate on device
+    inside the controller scan (and the online loop logs drift/burst/swap
+    events into the same ring), decoded once at run end into
+    ``FleetResult.telemetry`` (a ``TelemetryRecord``). ``telemetry=None``
+    never builds any of it: the traced programs, splits and metrics are
+    bit-identical to the prior engine (pinned by
+    ``tests/test_sim_telemetry.py``). ``TelemetryConfig(trace_dir=...)``
+    additionally wraps the run in a ``jax.profiler.trace`` capture.
     """
     check_quant(quant)
     if online is not None and quant is not None:
@@ -460,35 +584,56 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
                              online=online, fixed_split=fixed_split,
                              ue=ue, server=server, sched=sched,
                              cell=cell_idx, n_cells=n_cells,
-                             quant=quant, fused=fused)
+                             quant=quant, fused=fused, telemetry=telemetry)
     tables = (table.tables if isinstance(table, StackedLookupTable)
               else np.broadcast_to(table.table,
                                    (episode.n_ues, len(table.table))))
     true_tp = np.asarray(episode.tp_mbps, float)
+    tel = dconst = dbytes = None
+    if telemetry is not None:
+        tel = telmod.HostTelemetry(telemetry)
+        dconst = jnp.asarray(np.asarray(profile.d_ue(ue))
+                             + np.asarray(profile.d_ser(server)), jnp.float32)
+        dbytes = jnp.asarray(profile.data_bytes, jnp.float32)
     online_stats = None
-    if online is not None:
-        from repro.sim.online import online_estimate_fleet
-        if estimator is None:
-            raise ValueError("online adaptation needs an estimator")
-        est_tp, online_stats = online_estimate_fleet(episode, estimator,
-                                                     online, serving=serving,
-                                                     fused=fused)
-    else:
-        est_tp = (estimate_fleet(episode, estimator, serving=serving,
-                                 quant=quant, fused=fused)
-                  if estimator is not None else true_tp)
-    if warm_split is None:
-        warm_split = cfg.fallback_split if fixed_split is None else fixed_split
-    if sched is None:
-        splits, shares, eff_tp = (
-            run_controllers(tables, est_tp, cfg, warm_split), None, true_tp)
-    else:
-        if cell_idx is None:
-            raise ValueError("a scheduler needs a (N, T) cell_idx")
-        splits, shares = run_scheduled(tables, est_tp, cfg, warm_split,
-                                       sched, n_cells, cell_idx, true_tp)
-        eff_tp = tpmod.prb_scaled_mbps(true_tp, shares)
-        est_tp = est_tp * shares  # what the controllers consumed
+    rows = None
+    with telmod.trace_capture(telemetry.trace_dir
+                              if telemetry is not None else None):
+        if online is not None:
+            from repro.sim.online import online_estimate_fleet
+            if estimator is None:
+                raise ValueError("online adaptation needs an estimator")
+            est_tp, online_stats = online_estimate_fleet(
+                episode, estimator, online, serving=serving, fused=fused,
+                telemetry=tel)
+        else:
+            est_tp = (estimate_fleet(episode, estimator, serving=serving,
+                                     quant=quant, fused=fused)
+                      if estimator is not None else true_tp)
+        if warm_split is None:
+            warm_split = (cfg.fallback_split if fixed_split is None
+                          else fixed_split)
+        if sched is None:
+            shares, eff_tp = None, true_tp
+            if telemetry is None:
+                splits = run_controllers(tables, est_tp, cfg, warm_split)
+            else:
+                splits, tel.ts, rows = _run_controllers_telem(
+                    tables, est_tp, true_tp, cfg, warm_split, telemetry,
+                    dconst, dbytes, tel.ts)
+        else:
+            if cell_idx is None:
+                raise ValueError("a scheduler needs a (N, T) cell_idx")
+            if telemetry is None:
+                splits, shares = run_scheduled(tables, est_tp, cfg,
+                                               warm_split, sched, n_cells,
+                                               cell_idx, true_tp)
+            else:
+                splits, shares, tel.ts, rows = _run_scheduled_telem(
+                    tables, est_tp, cfg, warm_split, sched, n_cells,
+                    cell_idx, true_tp, telemetry, dconst, dbytes, tel.ts)
+            eff_tp = tpmod.prb_scaled_mbps(true_tp, shares)
+            est_tp = est_tp * shares  # what the controllers consumed
     delay, priv, energy = split_metrics(profile, splits, eff_tp, ue, server)
     fixed = None
     if fixed_split is not None:
@@ -497,7 +642,9 @@ def simulate_fleet(episode: EpisodeBatch, table, profile: SplitProfile,
         fixed = FleetResult(fsplits, true_tp, est_tp, fd, fp, fe,
                             prb_share=shares)
     return FleetResult(splits, true_tp, est_tp, delay, priv, energy, fixed,
-                       prb_share=shares, online=online_stats)
+                       prb_share=shares, online=online_stats,
+                       telemetry=tel.decode(rows) if tel is not None
+                       else None)
 
 
 def simulate_fleet_looped(episode: EpisodeBatch, table,

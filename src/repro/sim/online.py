@@ -53,6 +53,7 @@ from repro.estimator.train import (fwd, make_indexed_step,
                                    make_indexed_step_ssm)
 from repro.kernels.quant.ref import quantize_ref
 from repro.optim import AdamW
+from repro.sim import telemetry as telmod
 from repro.sim.serving import (STATE_AXES, ServingMesh, replicate_params,
                                serving_program, ssm_serving_program)
 
@@ -511,7 +512,8 @@ def online_step_program(ecfg: EstimatorConfig, opt: AdamW,
 
 def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
                           serving: Optional[ServingMesh] = None,
-                          tp_clip=TP_CLIP_MBPS, fused: bool = False
+                          tp_clip=TP_CLIP_MBPS, fused: bool = False,
+                          telemetry=None
                           ) -> tuple[np.ndarray, OnlineStats]:
     """(N, T) Mbps estimates + :class:`OnlineStats`: the closed loop.
 
@@ -534,6 +536,12 @@ def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
     ``fused=True`` swaps the WINDOW x host window materialization for
     per-period views of the normalized KPM trace (bit-identical f32
     elements, see ``engine.emit_period_samples``).
+
+    ``telemetry``: an optional ``telemetry.HostTelemetry`` — the loop logs
+    drift trigger/recovery, burst start/end and serving weight-swap
+    events into its device ring (the *metrics* accumulate later, in the
+    engine's controller scan, so nothing is double counted). The returned
+    values are unchanged.
     """
     from repro.sim.engine import emit_period_samples
 
@@ -543,7 +551,8 @@ def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
         # ring stores (pre-report state, report, label) events instead of
         # windows; ``fused`` is a no-op (nothing to featurize)
         return _online_estimate_fleet_ssm(episode, ecfg, params, ocfg,
-                                          serving=serving, tp_clip=tp_clip)
+                                          serving=serving, tp_clip=tp_clip,
+                                          telemetry=telemetry)
     if episode.iq is None:
         raise ValueError(
             "online adaptation needs IQ spectrograms: generate the episode "
@@ -589,9 +598,10 @@ def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
             s = emit_period_samples(episode, t, wins, trace=trace)
             kpms_t = place(s["kpms"], ("batch", None, None))
             iq_t = place(s["iq"], ("batch", None, None, None))
-            est[:, t] = np.clip(
-                np.asarray(predict_fn(params, kpms_t, iq_t, alloc_d)),
-                tp_clip[0], tp_clip[1])
+            with telmod.stage("estimator_fwd"):
+                est[:, t] = np.clip(
+                    np.asarray(predict_fn(params, kpms_t, iq_t, alloc_d)),
+                    tp_clip[0], tp_clip[1])
             tp_t = s["tp"]
             rmse[t] = float(np.sqrt(np.mean((est[:, t] - tp_t) ** 2)))
             buf = buffer_add(buf, kpms_t, iq_t, alloc_d,
@@ -602,22 +612,32 @@ def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
             # is ready fires on the first period it can be acted on
             dstate, fired = drift_step(ocfg.drift, dstate, rmse[t],
                                        armed=fill >= ocfg.min_fill)
+            if telemetry is not None:
+                telemetry.drift(t, bool(fired), rmse[t],
+                                drift_threshold(ocfg.drift, dstate),
+                                n_triggers=int(dstate.n_triggers))
             if fired:
                 data = buffer_data(buf)
                 burst = []
-                for _ in range(ocfg.steps):
-                    idx = jnp.asarray(rng.integers(0, fill, ocfg.batch), I32)
-                    key, sub = jax.random.split(key)
-                    params, opt_state, loss = step_fn(params, opt_state,
-                                                      data, idx, sub)
-                    burst.append(float(loss))
-                if serving is not None:
-                    # weight refresh: re-commit replicated so the next
-                    # period's predict is a compiled-program cache hit
-                    params = replicate_params(serving, params)
+                with telmod.stage("online_burst"):
+                    for _ in range(ocfg.steps):
+                        idx = jnp.asarray(rng.integers(0, fill, ocfg.batch),
+                                          I32)
+                        key, sub = jax.random.split(key)
+                        params, opt_state, loss = step_fn(params, opt_state,
+                                                          data, idx, sub)
+                        burst.append(float(loss))
+                    if serving is not None:
+                        # weight refresh: re-commit replicated so the next
+                        # period's predict is a compiled-program cache hit
+                        with telmod.stage("weight_swap"):
+                            params = replicate_params(serving, params)
                 total_steps += ocfg.steps
                 train_loss.append(float(np.mean(burst)))
                 adapted[t] = True
+                if telemetry is not None:
+                    telemetry.burst(t, ocfg.steps, float(np.mean(burst)),
+                                    serving is not None)
                 if mgr is not None:
                     mgr.save(dstate.n_triggers, params)  # async
                     ckpt_steps.append(dstate.n_triggers)
@@ -635,7 +655,7 @@ def online_estimate_fleet(episode, estimator, ocfg: OnlineConfig, *,
 def _online_estimate_fleet_ssm(episode, c: SSMConfig, params,
                                ocfg: OnlineConfig, *,
                                serving: Optional[ServingMesh] = None,
-                               tp_clip=TP_CLIP_MBPS
+                               tp_clip=TP_CLIP_MBPS, telemetry=None
                                ) -> tuple[np.ndarray, OnlineStats]:
     """The recurrent arm of :func:`online_estimate_fleet`.
 
@@ -699,8 +719,9 @@ def _online_estimate_fleet_ssm(episode, c: SSMConfig, params,
         for t in range(t_steps):
             feats_t = place(feats[:, off + t], ("batch", None))
             state_prev = state
-            state, fc = predict_fn(params, state, feats_t)
-            fc = np.asarray(fc)
+            with telmod.stage("estimator_fwd"):
+                state, fc = predict_fn(params, state, feats_t)
+                fc = np.asarray(fc)
             # the monitor watches the served *current* estimate's error;
             # the controllers consume the policy-reduced forecasts
             cur = np.clip(fc[:, 0], tp_clip[0], tp_clip[1])
@@ -713,20 +734,30 @@ def _online_estimate_fleet_ssm(episode, c: SSMConfig, params,
             fill = buffer_count(buf)
             dstate, fired = drift_step(ocfg.drift, dstate, rmse[t],
                                        armed=fill >= ocfg.min_fill)
+            if telemetry is not None:
+                telemetry.drift(t, bool(fired), rmse[t],
+                                drift_threshold(ocfg.drift, dstate),
+                                n_triggers=int(dstate.n_triggers))
             if fired:
                 data = buffer_data(buf)
                 burst = []
-                for _ in range(ocfg.steps):
-                    idx = jnp.asarray(rng.integers(0, fill, ocfg.batch), I32)
-                    key, sub = jax.random.split(key)
-                    params, opt_state, loss = step_fn(params, opt_state,
-                                                      data, idx, sub)
-                    burst.append(float(loss))
-                if serving is not None:
-                    params = replicate_params(serving, params)
+                with telmod.stage("online_burst"):
+                    for _ in range(ocfg.steps):
+                        idx = jnp.asarray(rng.integers(0, fill, ocfg.batch),
+                                          I32)
+                        key, sub = jax.random.split(key)
+                        params, opt_state, loss = step_fn(params, opt_state,
+                                                          data, idx, sub)
+                        burst.append(float(loss))
+                    if serving is not None:
+                        with telmod.stage("weight_swap"):
+                            params = replicate_params(serving, params)
                 total_steps += ocfg.steps
                 train_loss.append(float(np.mean(burst)))
                 adapted[t] = True
+                if telemetry is not None:
+                    telemetry.burst(t, ocfg.steps, float(np.mean(burst)),
+                                    serving is not None)
                 if mgr is not None:
                     mgr.save(dstate.n_triggers, params)  # async
                     ckpt_steps.append(dstate.n_triggers)

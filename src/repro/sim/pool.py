@@ -53,9 +53,11 @@ from repro.core.controller import (PENDING_NONE, ControllerConfig,
 from repro.core.energy import EDGE_A40X2, UE_VM_2CORE, DeviceProfile
 from repro.core.profiles import SplitProfile
 from repro.core.pso import NO_SPLIT, TP_CLIP_MBPS, StackedLookupTable
+from repro.sim import telemetry as telmod
 from repro.sim.sched import (SchedulerConfig, SchedulerState, scheduler_init,
                              scheduler_step)
 from repro.sim.serving import ServingMesh
+from repro.sim.telemetry import TelemetryConfig
 
 F32 = jnp.float32
 I32 = jnp.int32
@@ -115,10 +117,18 @@ class PoolPrograms(NamedTuple):
 def pool_programs(ewma_alpha: float, hysteresis_steps: int,
                   fallback_split: int,
                   sched: Optional[SchedulerConfig] = None, n_cells: int = 1,
-                  max_admits: int = 1) -> PoolPrograms:
+                  max_admits: int = 1,
+                  telem: Optional[TelemetryConfig] = None) -> PoolPrograms:
     """Compile the pool step once per configuration (jit's own cache then
     handles distinct (capacity, sessions, horizon) shapes — churn moves
-    the population, never the shapes, so the program never retraces)."""
+    the population, never the shapes, so the program never retraces).
+
+    ``telem`` (default None) swaps ``sweep`` for the telemetry variant:
+    the same scan additionally carries a ``TelemetryState``, folding each
+    period's masked metrics into it and logging per-lane EV_ADMIT /
+    aggregate EV_DEPART events into the device ring. ``telem=None``
+    returns the exact prior programs — the variant is a separate cache
+    entry, never a branch inside the default trace."""
     cfg = ControllerConfig(ewma_alpha, hysteresis_steps, fallback_split)
     step = functools.partial(controller_step, cfg=cfg)
     a_lanes = int(max_admits)
@@ -225,13 +235,38 @@ def pool_programs(ewma_alpha: float, hysteresis_steps: int,
         return (k, iq[sidc, agec], alloc[sidc],
                 _gather_tp(st, true), st.active)
 
+    if telem is None:
+        @jax.jit
+        def sweep(st0, tables, warm, est, true, cell, dwell, arrival_t,
+                  ready_end):
+            t_steps = ready_end.shape[0]
+
+            def body(st, xs):
+                t, ready_t = xs
+                st, lat = _admit(st, t, ready_t, arrival_t, warm)
+                act, sid, age = st.active, st.sid, st.age
+                est_t = _gather_tp(st, est)
+                true_t = _gather_tp(st, true)
+                cell_t = cell[jnp.clip(sid, 0, cell.shape[0] - 1)]
+                st, split, share = _serve(st, tables, est_t, true_t, cell_t)
+                st, n_dep = _retire(st, dwell)
+                return st, (act, sid, age, split, share, lat, n_dep)
+
+            return lax.scan(body, st0,
+                            (jnp.arange(t_steps, dtype=I32), ready_end))
+
+        return PoolPrograms(sweep=sweep, admit=admit,
+                            serve_retire=serve_retire, gather=gather)
+
     @jax.jit
-    def sweep(st0, tables, warm, est, true, cell, dwell, arrival_t,
-              ready_end):
+    def sweep_telem(st0, ts0, tables, warm, est, true, cell, dwell,
+                    arrival_t, ready_end, dconst, dbytes):
         t_steps = ready_end.shape[0]
 
-        def body(st, xs):
+        def body(carry, xs):
+            st, ts = carry
             t, ready_t = xs
+            sid0 = st.next_arrival  # lanes admit sessions sid0, sid0+1, ...
             st, lat = _admit(st, t, ready_t, arrival_t, warm)
             act, sid, age = st.active, st.sid, st.age
             est_t = _gather_tp(st, est)
@@ -239,13 +274,25 @@ def pool_programs(ewma_alpha: float, hysteresis_steps: int,
             cell_t = cell[jnp.clip(sid, 0, cell.shape[0] - 1)]
             st, split, share = _serve(st, tables, est_t, true_t, cell_t)
             st, n_dep = _retire(st, dwell)
-            return st, (act, sid, age, split, share, lat, n_dep)
+            with jax.named_scope("telemetry_step"):
+                eff = None
+                if sched is not None:
+                    # what split_metrics sees: PRB-scaled, floored
+                    eff = jnp.maximum(true_t * jnp.clip(share, 0.0, 1.0),
+                                      tpmod.PRB_FLOOR_MBPS)
+                ts, row = telmod.telemetry_step(
+                    telem, ts, period=t, split=split, est_tp=est_t,
+                    true_tp=true_t, eff_tp=eff, share=share, active=act,
+                    dconst=dconst, dbytes=dbytes,
+                    admit_sid=sid0 + jnp.arange(a_lanes, dtype=I32),
+                    admit_lat=lat, n_depart=n_dep)
+            return (st, ts), (act, sid, age, split, share, lat, n_dep, row)
 
-        return lax.scan(body, st0,
+        return lax.scan(body, (st0, ts0),
                         (jnp.arange(t_steps, dtype=I32), ready_end))
 
-    return PoolPrograms(sweep=sweep, admit=admit, serve_retire=serve_retire,
-                        gather=gather)
+    return PoolPrograms(sweep=sweep_telem, admit=admit,
+                        serve_retire=serve_retire, gather=gather)
 
 
 @dataclasses.dataclass
@@ -321,7 +368,8 @@ def simulate_pool(sessions: EpisodeBatch, schedule: ChurnSchedule, table,
                   server: DeviceProfile = EDGE_A40X2,
                   sched: Optional[SchedulerConfig] = None,
                   cell: Optional[np.ndarray] = None, n_cells: int = 1,
-                  quant: Optional[str] = None, fused: bool = False):
+                  quant: Optional[str] = None, fused: bool = False,
+                  telemetry: Optional[TelemetryConfig] = None):
     """Run a churning UE population through the slot pool.
 
     ``sessions``: an ``EpisodeBatch`` with one row per scheduled session —
@@ -340,7 +388,12 @@ def simulate_pool(sessions: EpisodeBatch, schedule: ChurnSchedule, table,
     in ``simulate_fleet``; ``cell`` is a static (M,) per-session attach.
     ``quant``/``fused`` are the int8-serving / fused-featurize switches,
     forwarded to the frozen and online estimate paths (defaults are the
-    exact prior program).
+    exact prior program). ``telemetry``: a
+    ``repro.sim.telemetry.TelemetryConfig`` carries the metric plane
+    through the pool scan (per-lane admission events with queue latency,
+    aggregate departures, masked histograms/stats) into
+    ``FleetResult.telemetry``; ``telemetry=None`` (default) never builds
+    it.
     """
     from repro.sim.engine import FleetResult, estimate_fleet, split_metrics
 
@@ -355,7 +408,7 @@ def simulate_pool(sessions: EpisodeBatch, schedule: ChurnSchedule, table,
     tables_np = _pool_tables(table, m)
     programs = pool_programs(cfg.ewma_alpha, cfg.hysteresis_steps,
                              cfg.fallback_split, sched, int(n_cells),
-                             int(schedule.max_admits))
+                             int(schedule.max_admits), telem=telemetry)
     st0 = pool_init(capacity, warm_split)
     tables_d = jnp.asarray(tables_np, I32)
     warm_d = jnp.asarray(warm_split, I32)
@@ -363,22 +416,40 @@ def simulate_pool(sessions: EpisodeBatch, schedule: ChurnSchedule, table,
     cell_d = jnp.asarray(cell if cell is not None else np.zeros(m), I32)
     dwell_d = jnp.asarray(schedule.dwell, I32)
     arrival_d = jnp.asarray(schedule.arrival_t, I32)
+    tel = dconst = dbytes = None
+    if telemetry is not None:
+        tel = telmod.HostTelemetry(telemetry)
+        dconst = jnp.asarray(np.asarray(profile.d_ue(ue))
+                             + np.asarray(profile.d_ser(server)), F32)
+        dbytes = jnp.asarray(profile.data_bytes, F32)
 
     online_stats = None
+    telem_rec = None
     if online is not None:
         outs, est_tp, online_stats = _online_pool_run(
             sessions, schedule, estimator, online, programs, st0, tables_d,
             warm_d, true_d, cell_d, dwell_d, arrival_d, serving=serving,
-            fused=fused)
+            fused=fused, telemetry=tel, tel_dconst=dconst,
+            tel_dbytes=dbytes, tel_sched=sched is not None)
         act_ts, sid_ts, age_ts, split_ts, share_ts, lat_ts, dep_ts = outs
+        if tel is not None:
+            telem_rec = tel.decode()
     else:
         est_np = (estimate_fleet(sessions, estimator, serving=serving,
                                  quant=quant, fused=fused)
                   if estimator is not None else true_np)
         est_d = jnp.asarray(est_np, F32)
-        _, ys = programs.sweep(st0, tables_d, warm_d, est_d, true_d, cell_d,
-                               dwell_d, arrival_d,
-                               jnp.asarray(schedule.ready_end, I32))
+        if telemetry is None:
+            _, ys = programs.sweep(st0, tables_d, warm_d, est_d, true_d,
+                                   cell_d, dwell_d, arrival_d,
+                                   jnp.asarray(schedule.ready_end, I32))
+        else:
+            (_, tel.ts), ys = programs.sweep(
+                st0, tel.ts, tables_d, warm_d, est_d, true_d, cell_d,
+                dwell_d, arrival_d, jnp.asarray(schedule.ready_end, I32),
+                dconst, dbytes)
+            ys, rows = ys[:7], ys[7]
+            telem_rec = tel.decode(rows)
         act_ts, sid_ts, age_ts, split_ts, share_ts, lat_ts, dep_ts = (
             np.asarray(y) for y in ys)
         est_tp = None  # gathered below from the per-session estimates
@@ -423,7 +494,7 @@ def simulate_pool(sessions: EpisodeBatch, schedule: ChurnSchedule, table,
         admit_latency=lat_ts[lat_valid].astype(np.int64))
     return FleetResult(splits, true_tp, est_tp, delay, priv, energy, fixed,
                        prb_share=shares, online=online_stats, active=act,
-                       lifecycle=stats)
+                       lifecycle=stats, telemetry=telem_rec)
 
 
 @jax.jit
@@ -452,13 +523,19 @@ def _ssm_pool_gather(active, sid, age, feats, true):
 def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
                      tables_d, warm_d, true_d, cell_d, dwell_d, arrival_d,
                      *, serving=None, tp_clip=TP_CLIP_MBPS,
-                     fused=False):
+                     fused=False, telemetry=None, tel_dconst=None,
+                     tel_dbytes=None, tel_sched=False):
     """The closed-loop arm of ``simulate_pool``: the same admit/serve/
     retire step driven from a host loop so each period's estimator
     forward runs with the *current* weights, only active slots' samples
     are ring-ingested (``buffer_add_masked``), and drift-triggered
     adaptation bursts run between periods exactly as in
-    ``repro.sim.online.online_estimate_fleet``."""
+    ``repro.sim.online.online_estimate_fleet``.
+
+    ``telemetry``: an optional ``telemetry.HostTelemetry`` — per period
+    one jitted metric update (masked to the live slots, with admission
+    lanes and departures) plus drift/burst/weight-swap events; the return
+    shapes are unchanged, the caller decodes the record."""
     import contextlib
 
     from repro.checkpoint import CheckpointManager
@@ -477,7 +554,8 @@ def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
         return _online_pool_run_ssm(
             sessions, schedule, estimator, ocfg, programs, st0, tables_d,
             warm_d, true_d, cell_d, dwell_d, arrival_d, serving=serving,
-            tp_clip=tp_clip)
+            tp_clip=tp_clip, telemetry=telemetry, tel_dconst=tel_dconst,
+            tel_dbytes=tel_dbytes, tel_sched=tel_sched)
     if sessions.iq is None:
         raise ValueError(
             "online adaptation needs IQ spectrograms: generate the episode "
@@ -532,6 +610,7 @@ def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
     st = st0
     with ctx:
         for t in range(t_steps):
+            sid0 = int(st.next_arrival) if telemetry is not None else 0
             st, lat = programs.admit(st, jnp.asarray(t, I32),
                                      jnp.asarray(int(ready[t]), I32),
                                      arrival_d, warm_d)
@@ -543,7 +622,8 @@ def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
                 iq_t = sh.put(iq_t, ("batch", None, None, None))
                 alloc_t = sh.put(alloc_t, ("batch",))
                 tp_t = sh.put(tp_t, ("batch",))
-            raw = np.asarray(predict_fn(params, kpms_t, iq_t, alloc_t))
+            with telmod.stage("estimator_fwd"):
+                raw = np.asarray(predict_fn(params, kpms_t, iq_t, alloc_t))
             act_np = np.asarray(act_m)
             est_col = np.where(act_np,
                                np.clip(raw, tp_clip[0], tp_clip[1]), 0.0)
@@ -556,20 +636,30 @@ def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
             fill = buffer_count(buf)
             dstate, fired = drift_step(ocfg.drift, dstate, rmse[t],
                                        armed=fill >= ocfg.min_fill)
+            if telemetry is not None:
+                telemetry.drift(t, bool(fired), rmse[t],
+                                drift_threshold(ocfg.drift, dstate),
+                                n_triggers=int(dstate.n_triggers))
             if fired:
                 data = buffer_data(buf)
                 burst = []
-                for _ in range(ocfg.steps):
-                    idx = jnp.asarray(rng.integers(0, fill, ocfg.batch), I32)
-                    key, sub = jax.random.split(key)
-                    params, opt_state, loss = step_fn(params, opt_state,
-                                                      data, idx, sub)
-                    burst.append(float(loss))
-                if serving is not None:
-                    params = replicate_params(serving, params)
+                with telmod.stage("online_burst"):
+                    for _ in range(ocfg.steps):
+                        idx = jnp.asarray(rng.integers(0, fill, ocfg.batch),
+                                          I32)
+                        key, sub = jax.random.split(key)
+                        params, opt_state, loss = step_fn(params, opt_state,
+                                                          data, idx, sub)
+                        burst.append(float(loss))
+                    if serving is not None:
+                        with telmod.stage("weight_swap"):
+                            params = replicate_params(serving, params)
                 total_steps += ocfg.steps
                 train_loss.append(float(np.mean(burst)))
                 adapted[t] = True
+                if telemetry is not None:
+                    telemetry.burst(t, ocfg.steps, float(np.mean(burst)),
+                                    serving is not None)
                 if mgr is not None:
                     mgr.save(dstate.n_triggers, params)
                     ckpt_steps.append(dstate.n_triggers)
@@ -577,6 +667,17 @@ def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
                 st, tables_d, jnp.asarray(est_col, F32), true_d, cell_d,
                 dwell_d)
             outs.append([np.asarray(y) for y in ys])
+            if telemetry is not None:
+                o = outs[-1]
+                eff = (np.maximum(tp_np * np.clip(o[4], 0.0, 1.0),
+                                  tpmod.PRB_FLOOR_MBPS)
+                       if tel_sched else None)
+                telemetry.update(
+                    period=t, split=o[3], est=est_col, true=tp_np,
+                    share=o[4], active=o[0], dconst=tel_dconst,
+                    dbytes=tel_dbytes, eff=eff,
+                    admit_sid=sid0 + np.arange(lat_rows[-1].shape[0]),
+                    admit_lat=lat_rows[-1], n_depart=o[5])
     if mgr is not None:
         mgr.wait()
     stats = OnlineStats(rmse=rmse, adapted=adapted,
@@ -594,7 +695,9 @@ def _online_pool_run(sessions, schedule, estimator, ocfg, programs, st0,
 
 def _online_pool_run_ssm(sessions, schedule, estimator, ocfg, programs, st0,
                          tables_d, warm_d, true_d, cell_d, dwell_d,
-                         arrival_d, *, serving=None, tp_clip=TP_CLIP_MBPS):
+                         arrival_d, *, serving=None, tp_clip=TP_CLIP_MBPS,
+                         telemetry=None, tel_dconst=None, tel_dbytes=None,
+                         tel_sched=False):
     """The recurrent closed-loop arm of ``simulate_pool``.
 
     Slots carry per-slot SSD states alongside the controller states. On
@@ -676,6 +779,7 @@ def _online_pool_run_ssm(sessions, schedule, estimator, ocfg, programs, st0,
         warm_all = ssm_warm_state(c, params, warm_prefix)  # (M, ...)
         slot_state = place(ssm_state_init(c, (s_slots,)), STATE_AXES)
         for t in range(t_steps):
+            sid0 = int(st.next_arrival) if telemetry is not None else 0
             st, lat = programs.admit(st, jnp.asarray(t, I32),
                                      jnp.asarray(int(ready[t]), I32),
                                      arrival_d, warm_d)
@@ -690,8 +794,9 @@ def _online_pool_run_ssm(sessions, schedule, estimator, ocfg, programs, st0,
                 feats_t = place(feats_t, ("batch", None))
                 tp_t = place(tp_t, ("batch",))
             state_prev = slot_state
-            slot_state, fc = predict_fn(params, slot_state, feats_t)
-            fc = np.asarray(fc)
+            with telmod.stage("estimator_fwd"):
+                slot_state, fc = predict_fn(params, slot_state, feats_t)
+                fc = np.asarray(fc)
             act_np = np.asarray(st.active)
             cur = np.clip(fc[:, 0], tp_clip[0], tp_clip[1])
             est_col = np.where(
@@ -707,22 +812,32 @@ def _online_pool_run_ssm(sessions, schedule, estimator, ocfg, programs, st0,
             fill = buffer_count(buf)
             dstate, fired = drift_step(ocfg.drift, dstate, rmse[t],
                                        armed=fill >= ocfg.min_fill)
+            if telemetry is not None:
+                telemetry.drift(t, bool(fired), rmse[t],
+                                drift_threshold(ocfg.drift, dstate),
+                                n_triggers=int(dstate.n_triggers))
             if fired:
                 data = buffer_data(buf)
                 burst = []
-                for _ in range(ocfg.steps):
-                    idx = jnp.asarray(rng.integers(0, fill, ocfg.batch), I32)
-                    key, sub = jax.random.split(key)
-                    params, opt_state, loss = step_fn(params, opt_state,
-                                                      data, idx, sub)
-                    burst.append(float(loss))
-                if serving is not None:
-                    params = replicate_params(serving, params)
+                with telmod.stage("online_burst"):
+                    for _ in range(ocfg.steps):
+                        idx = jnp.asarray(rng.integers(0, fill, ocfg.batch),
+                                          I32)
+                        key, sub = jax.random.split(key)
+                        params, opt_state, loss = step_fn(params, opt_state,
+                                                          data, idx, sub)
+                        burst.append(float(loss))
+                    if serving is not None:
+                        with telmod.stage("weight_swap"):
+                            params = replicate_params(serving, params)
                 # future admits warm with the weights that will serve them
                 warm_all = ssm_warm_state(c, params, warm_prefix)
                 total_steps += ocfg.steps
                 train_loss.append(float(np.mean(burst)))
                 adapted[t] = True
+                if telemetry is not None:
+                    telemetry.burst(t, ocfg.steps, float(np.mean(burst)),
+                                    serving is not None)
                 if mgr is not None:
                     mgr.save(dstate.n_triggers, params)
                     ckpt_steps.append(dstate.n_triggers)
@@ -730,6 +845,17 @@ def _online_pool_run_ssm(sessions, schedule, estimator, ocfg, programs, st0,
                 st, tables_d, jnp.asarray(est_col, F32), true_d, cell_d,
                 dwell_d)
             outs.append([np.asarray(y) for y in ys])
+            if telemetry is not None:
+                o = outs[-1]
+                eff = (np.maximum(tp_np * np.clip(o[4], 0.0, 1.0),
+                                  tpmod.PRB_FLOOR_MBPS)
+                       if tel_sched else None)
+                telemetry.update(
+                    period=t, split=o[3], est=est_col, true=tp_np,
+                    share=o[4], active=o[0], dconst=tel_dconst,
+                    dbytes=tel_dbytes, eff=eff,
+                    admit_sid=sid0 + np.arange(lat_rows[-1].shape[0]),
+                    admit_lat=lat_rows[-1], n_depart=o[5])
     if mgr is not None:
         mgr.wait()
     stats = OnlineStats(rmse=rmse, adapted=adapted,

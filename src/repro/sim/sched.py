@@ -112,31 +112,34 @@ def scheduler_step(cfg: SchedulerConfig, n_cells: int, state: SchedulerState,
                 else segment_max(v, g, num_segments=c))
 
     if active is None:
+        with jax.named_scope(f"sched_{cfg.policy}"):
+            if cfg.policy == "rr":
+                w = jnp.ones_like(r)
+            elif cfg.policy == "pf":
+                w = r / jnp.maximum(state.avg_tp, cfg.eps)
+            else:  # maxsinr (validated in __post_init__)
+                cmax = seg_max(r, cell_idx, n_cells)
+                w = (r >= cmax[cell_idx]).astype(F32)
+            share = cell_shares(w, cell_idx, n_cells, cfg.eps, cfg.fused)
+            new = SchedulerState(
+                avg_tp=(1 - beta) * state.avg_tp + beta * r * share,
+                step=state.step + 1)
+            return new, share
+    with jax.named_scope(f"sched_{cfg.policy}_masked"):
+        act = jnp.asarray(active, bool)
+        actf = act.astype(F32)
+        cell_m = jnp.where(act, cell_idx, n_cells)  # dummy segment: empties
         if cfg.policy == "rr":
-            w = jnp.ones_like(r)
+            w = actf
         elif cfg.policy == "pf":
-            w = r / jnp.maximum(state.avg_tp, cfg.eps)
-        else:  # maxsinr (validated in __post_init__)
-            cmax = seg_max(r, cell_idx, n_cells)
-            w = (r >= cmax[cell_idx]).astype(F32)
-        share = cell_shares(w, cell_idx, n_cells, cfg.eps, cfg.fused)
+            w = actf * (r / jnp.maximum(state.avg_tp, cfg.eps))
+        else:  # maxsinr
+            cmax = seg_max(r, cell_m, n_cells + 1)
+            w = ((r >= cmax[cell_m]) & act).astype(F32)
+        share = cell_shares(w, cell_m, n_cells + 1, cfg.eps, cfg.fused)
         new = SchedulerState(
-            avg_tp=(1 - beta) * state.avg_tp + beta * r * share,
+            avg_tp=jnp.where(act,
+                             (1 - beta) * state.avg_tp + beta * r * share,
+                             state.avg_tp),
             step=state.step + 1)
         return new, share
-    act = jnp.asarray(active, bool)
-    actf = act.astype(F32)
-    cell_m = jnp.where(act, cell_idx, n_cells)  # dummy segment for empties
-    if cfg.policy == "rr":
-        w = actf
-    elif cfg.policy == "pf":
-        w = actf * (r / jnp.maximum(state.avg_tp, cfg.eps))
-    else:  # maxsinr
-        cmax = seg_max(r, cell_m, n_cells + 1)
-        w = ((r >= cmax[cell_m]) & act).astype(F32)
-    share = cell_shares(w, cell_m, n_cells + 1, cfg.eps, cfg.fused)
-    new = SchedulerState(
-        avg_tp=jnp.where(act, (1 - beta) * state.avg_tp + beta * r * share,
-                         state.avg_tp),
-        step=state.step + 1)
-    return new, share

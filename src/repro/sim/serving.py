@@ -125,7 +125,8 @@ def serving_program(ecfg: EstimatorConfig, serving: ServingMesh,
 
     @jax.jit
     def fn(params, kpms, iq, alloc):
-        with sh.use_rules(mesh, overrides):
+        with sh.use_rules(mesh, overrides), \
+                jax.named_scope("estimator_fwd"):
             if quant == "int8":
                 return estimator_forward_int8(ecfg, params, kpms, iq, alloc,
                                               use_kernel=False)
@@ -208,7 +209,8 @@ def ssm_serving_program(c: SSMConfig, serving: ServingMesh):
 
     @jax.jit
     def fn(params, state, feats):
-        with sh.use_rules(mesh, overrides):
+        with sh.use_rules(mesh, overrides), \
+                jax.named_scope("estimator_fwd"):
             return ssm_step(c, params, state, feats)
 
     return fn

@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""Render run health from a telemetry record (``repro.sim.telemetry``).
+
+Reads the JSON a ``benchmarks/fleet.py --telemetry --json`` run commits
+(or any dict with a ``TelemetryRecord.to_dict()`` payload under
+``telemetry.record``) and prints the run-health summary an operator
+would want first: occupancy over time, estimator RMSE, the drift /
+adaptation event timeline, admission-latency percentiles and the metric
+histograms — all from the committed artifact, no simulator import, no
+jax.
+
+Usage: python tools/fleetmon.py [benchmarks/results/telemetry_smoke.json]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+DEFAULT = (pathlib.Path(__file__).resolve().parents[1]
+           / "benchmarks" / "results" / "telemetry_smoke.json")
+BARS = " ▁▂▃▄▅▆▇█"
+
+
+def sparkline(values, width: int = 60) -> str:
+    """Unicode sparkline of a series (downsampled to ``width`` points)."""
+    vals = [float(v) for v in values]
+    if not vals:
+        return "(empty)"
+    if len(vals) > width:
+        stride = len(vals) / width
+        vals = [vals[int(i * stride)] for i in range(width)]
+    lo, hi = min(vals), max(vals)
+    span = (hi - lo) or 1.0
+    return "".join(BARS[1 + int((v - lo) / span * (len(BARS) - 2))]
+                   for v in vals)
+
+
+def hbar(count: int, total: int, width: int = 40) -> str:
+    n = 0 if total <= 0 else int(round(width * count / total))
+    return "#" * n
+
+
+def percentile(sorted_vals, q: float) -> float:
+    """Nearest-rank percentile of an ascending list (no numpy needed)."""
+    if not sorted_vals:
+        return float("nan")
+    idx = min(len(sorted_vals) - 1,
+              max(0, int(round(q / 100.0 * (len(sorted_vals) - 1)))))
+    return float(sorted_vals[idx])
+
+
+def load_record(path: pathlib.Path) -> dict:
+    payload = json.loads(path.read_text())
+    # accept the benchmark JSON ({"telemetry": {"record": ...}}), a bare
+    # {"record": ...} wrapper, or the record dict itself
+    for key in ("telemetry", "record"):
+        if isinstance(payload, dict) and key in payload:
+            payload = payload[key]
+    if "record" in payload:
+        payload = payload["record"]
+    if "events" not in payload or "series" not in payload:
+        raise SystemExit(f"{path}: no telemetry record found")
+    return payload
+
+
+def render(rec: dict) -> str:
+    lines = []
+    periods = rec["periods"]
+    active = rec["active_steps"]
+    lines.append(f"periods={periods}  active_ue_steps={active}  "
+                 f"admitted={rec['admitted']}  departed={rec['departed']}  "
+                 f"handovers={rec['handovers']}")
+    if rec.get("dropped_events"):
+        lines.append(f"WARNING: event ring overflowed — "
+                     f"{rec['dropped_events']} events dropped "
+                     f"(raise TelemetryConfig.events_capacity)")
+
+    series = rec["series"]
+    lines.append("")
+    lines.append("series (per report period):")
+    for name, label in (("occupancy", "occupancy "),
+                        ("rmse_mbps", "rmse_mbps "),
+                        ("mean_delay_s", "delay_s   ")):
+        vals = series.get(name) or []
+        if vals:
+            lines.append(f"  {label} {sparkline(vals)}  "
+                         f"last={vals[-1]:.3g} max={max(vals):.3g}")
+
+    lines.append("")
+    lines.append("stats (over active UE-steps):")
+    for name, s in rec["stats"].items():
+        lines.append(f"  {name:14s} mean={s['mean']:.4g}  "
+                     f"min={s['min']:.4g}  max={s['max']:.4g}")
+
+    admits = [e for e in rec["events"] if e["kind"] == "admit"]
+    lats = sorted(e["value"] for e in admits)
+    if lats:
+        lines.append("")
+        lines.append(f"admission latency (periods, {len(lats)} admits): "
+                     f"p50={percentile(lats, 50):.1f}  "
+                     f"p99={percentile(lats, 99):.1f}  "
+                     f"max={lats[-1]:.1f}")
+
+    lines.append("")
+    lines.append("event timeline (aggregate admits/departs per period):")
+    by_period: dict[int, list] = {}
+    for e in rec["events"]:
+        by_period.setdefault(e["period"], []).append(e)
+    for t in sorted(by_period):
+        parts = []
+        evs = by_period[t]
+        n_admit = sum(1 for e in evs if e["kind"] == "admit")
+        n_depart = sum(e["arg"] for e in evs if e["kind"] == "depart")
+        if n_admit:
+            parts.append(f"+{n_admit} admit")
+        if n_depart:
+            parts.append(f"-{n_depart} depart")
+        for e in evs:
+            if e["kind"] in ("admit", "depart"):
+                continue
+            detail = {"drift_trigger": f"rmse={e['value']:.1f}",
+                      "drift_recover": f"rmse={e['value']:.1f}",
+                      "burst_start": f"steps={e['arg']}",
+                      "burst_end": f"loss={e['value']:.3g}",
+                      "handover": f"ues={e['arg']}",
+                      }.get(e["kind"], f"arg={e['arg']}")
+            parts.append(f"{e['kind']}({detail})")
+        lines.append(f"  t={t:4d}  " + "  ".join(parts))
+
+    lines.append("")
+    lines.append("histograms:")
+    for name, h in rec["hists"].items():
+        counts = h["counts"]
+        total = sum(counts)
+        lines.append(f"  {name} (n={total}):")
+        edges = h.get("edges")
+        for i, c in enumerate(counts):
+            if not c:
+                continue
+            if name == "split":  # bucket 0 is NO_SPLIT, bucket i split i-1
+                label = "NO_SPLIT" if i == 0 else f"split {i - 1:3d}"
+            elif edges is not None:
+                label = f"[{edges[i]:.3g}, {edges[i + 1]:.3g})"
+            else:
+                label = f"bin {i}"
+            lines.append(f"    {label:>18s} {hbar(c, total)} {c}")
+    return "\n".join(lines)
+
+
+def main(argv: list[str]) -> int:
+    path = pathlib.Path(argv[1]) if len(argv) > 1 else DEFAULT
+    print(render(load_record(path)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
